@@ -1,0 +1,93 @@
+"""Aggregate dry-run artifacts into the §Roofline table.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits a
+markdown table per mesh with the three roofline terms, the dominant
+bottleneck, and the MODEL_FLOPS/HLO_FLOPS usefulness ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+ARTIFACTS = os.environ.get(
+    "ROOFLINE_DIR", os.path.join(os.path.dirname(__file__), "../artifacts/dryrun")
+)
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_all() -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def table(mesh: str = "16x16") -> str:
+    rows = [r for r in load_all() if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | model/HLO flops |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        rf = r["roofline"]
+        ratio = r.get("model_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant'].replace('_s','')} | "
+            f"{ratio:.2f} |" if ratio else
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant'].replace('_s','')} | n/a |"
+        )
+    return "\n".join(lines)
+
+
+def summary() -> Dict:
+    """Worst roofline fraction + most collective-bound pairs (hillclimb
+    candidate selection)."""
+    rows = [r for r in load_all() if r["mesh"] == "16x16"]
+    def frac(r):
+        rf = r["roofline"]
+        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        return rf["compute_s"] / total if total else 0.0
+    by_frac = sorted(rows, key=frac)
+    by_coll = sorted(
+        rows,
+        key=lambda r: -(r["roofline"]["collective_s"] /
+                        max(r["roofline"]["compute_s"] + r["roofline"]["memory_s"] +
+                            r["roofline"]["collective_s"], 1e-12)),
+    )
+    return {
+        "worst_compute_fraction": [(r["arch"], r["shape"], round(frac(r), 3)) for r in by_frac[:5]],
+        "most_collective_bound": [
+            (r["arch"], r["shape"],
+             round(r["roofline"]["collective_s"] /
+                   max(r["roofline"]["compute_s"] + r["roofline"]["memory_s"] +
+                       r["roofline"]["collective_s"], 1e-12), 3))
+            for r in by_coll[:5]
+        ],
+    }
+
+
+if __name__ == "__main__":
+    print("## single-pod (16x16)\n")
+    print(table("16x16"))
+    print("\n## multi-pod (2x16x16)\n")
+    print(table("2x16x16"))
+    print("\n## hillclimb candidates\n")
+    print(json.dumps(summary(), indent=2))

@@ -1,0 +1,235 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Timing benchmarks measure
+the CPU host (the TPU numbers come from the dry-run roofline, see
+benchmarks/roofline.py); `derived` carries the table's headline quantity
+(speedup, mAP, ms/image, ...).
+
+  bench_fig5_context_cost    ORIC computation cost vs |E| (footnote 2)
+  bench_fig5_context_gain    oracle mAP vs |E| (Fig. 5, from artifacts)
+  bench_table2_conservatism  reward-sign subsets (Table II, from artifacts)
+  bench_fig6_errors          TIDE decomposition (Fig. 6, from artifacts)
+  bench_fig9_10_policies     mAP per policy @ r=0.2 (Figs. 9/10)
+  bench_table3_pipeline      per-image pipeline latency breakdown (Table III)
+  bench_fig13_ratio_latency  detection time & mAP vs offloading ratio (Fig 13)
+  bench_incremental_map      APAccumulator incremental vs full recompute
+  bench_kernels              Pallas oracles (jnp path) per-call time
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, List
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "../artifacts")
+ROWS: List[str] = []
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def _timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _load_results():
+    path = os.path.join(ART, "repro_results.json")
+    if not os.path.exists(path):
+        from repro.experiments.detection_repro import run_all
+
+        return run_all(quick=True)
+    with open(path) as f:
+        return json.load(f)
+
+
+def _pipeline_state():
+    from repro.experiments.detection_repro import build_pipeline
+
+    return build_pipeline()
+
+
+def bench_fig5_context_gain() -> None:
+    r = _load_results()
+    f5 = r["figure5"]
+    for ratio_key, cur in f5["curves"].items():
+        gain = cur["mean"][-1] - cur["mean"][0]
+        emit(
+            f"fig5_gain_{ratio_key}", 0.0,
+            f"mAP(|E|=0)={cur['mean'][0]:.4f};mAP(|E|max)={cur['mean'][-1]:.4f};delta={gain:+.4f}",
+        )
+
+
+def bench_fig5_context_cost() -> None:
+    """ORIC evaluation cost grows with |E| — the footnote-2 trade-off."""
+    import numpy as _np
+
+    from repro.core.reward import RewardOracle
+
+    state = _pipeline_state()
+    pairs = state.val_pairs[:100]
+    rng = _np.random.default_rng(0)
+    for E in (0, 100, 400, 800):
+        oracle = RewardOracle.from_pool(state.pool_weak_evals, E, rng)
+        us = _timeit(lambda: oracle.oric_batch(pairs), n=2)
+        emit(f"fig5_cost_E{E}", us / len(pairs), f"us_per_image_at_context_{E}")
+
+
+def bench_table2_conservatism() -> None:
+    r = _load_results()
+    for k, v in r["table2"].items():
+        emit(
+            f"table2_{k}", 0.0,
+            f"pct={v['pct']:.1f};weak_map={v['weak_map']:.4f};strong_map={v['strong_map']:.4f}",
+        )
+
+
+def bench_fig6_errors() -> None:
+    r = _load_results()
+    for policy in ("weak", "strong", "ORI", "ORIC"):
+        e = r["figure6"][policy]
+        derived = ";".join(
+            f"{c}={e[c]:.4f}" for c in ("cls", "loc", "cls_loc", "dupe", "bkg", "miss")
+        )
+        emit(f"fig6_{policy}", 0.0, derived)
+
+
+def bench_fig9_10_policies() -> None:
+    r = _load_results()
+    ratios = r["figure9_10"]["ratios"]
+    i = ratios.index(0.2)
+    for name, cur in r["figure9_10"]["curves"].items():
+        emit(f"fig10_{name}_r0.2", 0.0, f"norm_map={cur['norm'][i]:.1f}%")
+    emit("fig10_dcsb", 0.0,
+         f"ratio={r['figure9_10']['dcsb']['ratio']:.2f};norm_map={r['figure9_10']['dcsb']['norm']:.1f}%")
+
+
+def bench_table3_pipeline() -> None:
+    """Per-image latency breakdown on this host (Table III analogue)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import EstimatorConfig, RewardEstimator, extract_features
+    from repro.data.shapes import ShapesDataset
+    from repro.models.detector import STRONG, WEAK, decode_detections, detector_init
+
+    val = ShapesDataset.generate(64, seed=5)
+    pw = detector_init(jax.random.PRNGKey(0), WEAK)
+    ps = detector_init(jax.random.PRNGKey(1), STRONG)
+    est = RewardEstimator(387, EstimatorConfig(epochs=1))
+    est.fit(np.zeros((8, 387), np.float32), np.zeros(8, np.float32))
+
+    us_weak = _timeit(lambda: decode_detections(pw, WEAK, val.images), n=2) / len(val)
+    dets = decode_detections(pw, WEAK, val.images)
+    feats = np.stack([extract_features(d, 8, image_size=64.0) for d in dets])
+    us_est = _timeit(lambda: est.predict(feats), n=5) / len(val)
+    us_strong = _timeit(lambda: decode_detections(ps, STRONG, val.images), n=2) / len(val)
+    total_off = us_weak + us_est + us_strong
+    emit("table3_weak_detector", us_weak, f"share_not_offloaded={us_weak/(us_weak+us_est)*100:.1f}%")
+    emit("table3_reward_estimation", us_est, f"share_not_offloaded={us_est/(us_weak+us_est)*100:.1f}%")
+    emit("table3_strong_detector", us_strong, f"share_offloaded={us_strong/total_off*100:.1f}%")
+
+
+def bench_fig13_ratio_latency() -> None:
+    """mAP and mean per-image time vs offloading ratio (concavity check)."""
+    r = _load_results()
+    state = _pipeline_state()
+    # host timings for weak/strong passes
+    import jax
+
+    from repro.models.detector import STRONG, WEAK, decode_detections
+    from repro.train.checkpoint import load_pytree
+    from repro.models.detector import detector_init
+
+    curves = r["figure9_10"]["curves"]["est_MORIC"]
+    ratios = r["figure9_10"]["ratios"]
+    pw = detector_init(jax.random.PRNGKey(0), WEAK)
+    ps = detector_init(jax.random.PRNGKey(1), STRONG)
+    from repro.data.shapes import ShapesDataset
+
+    val = ShapesDataset.generate(32, seed=6)
+    us_w = _timeit(lambda: decode_detections(pw, WEAK, val.images), n=2) / 32
+    us_s = _timeit(lambda: decode_detections(ps, STRONG, val.images), n=2) / 32
+    for ratio, m in zip(ratios, curves["map"]):
+        us = us_w + ratio * us_s
+        emit(f"fig13_r{ratio}", us, f"map={m:.4f}")
+
+
+def bench_incremental_map() -> None:
+    """Beyond-paper: incremental context evaluation vs full recompute."""
+    from repro.detection.map_engine import APAccumulator, dataset_map, match_detections
+
+    state = _pipeline_state()
+    evals = state.pool_weak_evals[:800]
+    acc = APAccumulator((0.5,))
+    for ev in evals:
+        acc.add(ev)
+    acc.map()  # warm caches
+    probe = state.val_pairs[0].weak
+    us_inc = _timeit(lambda: acc.map_with_image(probe), n=20)
+
+    def full():
+        a2 = APAccumulator((0.5,))
+        for ev in evals:
+            a2.add(ev)
+        a2.add(probe)
+        return a2.map()
+
+    us_full = _timeit(full, n=2)
+    emit("incremental_map", us_inc, f"full_recompute_us={us_full:.0f};speedup={us_full/us_inc:.0f}x")
+
+
+def bench_kernels() -> None:
+    import jax.numpy as jnp
+
+    from repro.kernels.estimator_mlp.ref import estimator_mlp_ref
+    from repro.kernels.iou_matrix.ref import iou_matrix_ref
+    import jax
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(np.concatenate([rng.uniform(0, 50, (512, 2))] * 2, 1), jnp.float32)
+    b = jnp.asarray(np.concatenate([rng.uniform(0, 50, (512, 2))] * 2, 1), jnp.float32)
+    f = jax.jit(iou_matrix_ref)
+    f(a, b).block_until_ready()
+    emit("kernel_iou_512x512", _timeit(lambda: f(a, b).block_until_ready(), n=20),
+         "jnp_oracle;pallas_validated_in_tests")
+    x = jnp.asarray(rng.normal(0, 1, (256, 384)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(0, 0.1, (384, 128)), jnp.float32)
+    b1 = jnp.zeros(128)
+    w2 = jnp.asarray(rng.normal(0, 0.1, 128), jnp.float32)
+    g = jax.jit(estimator_mlp_ref)
+    g(x, w1, b1, w2, 0.0).block_until_ready()
+    emit("kernel_estimator_mlp_b256", _timeit(lambda: g(x, w1, b1, w2, 0.0).block_until_ready(), n=50),
+         "jnp_oracle;pallas_validated_in_tests")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_fig5_context_gain()
+    bench_fig5_context_cost()
+    bench_table2_conservatism()
+    bench_fig6_errors()
+    bench_fig9_10_policies()
+    bench_table3_pipeline()
+    bench_fig13_ratio_latency()
+    bench_incremental_map()
+    bench_kernels()
+    out = os.path.join(ART, "bench_results.csv")
+    os.makedirs(ART, exist_ok=True)
+    with open(out, "w") as f:
+        f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""The paper's full evaluation (Figs. 5/9/10, Tables II) from the cached
+pipeline — runs the complete experiment suite and prints a summary.
+
+Run:  PYTHONPATH=src python examples/offload_detection.py [--quick] [--force]
+"""
+import argparse
+import json
+
+from repro.experiments.detection_repro import run_all
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    results = run_all(force=args.force, quick=args.quick)
+
+    print("\n===== summary =====")
+    print(f"weak mAP {results['weak_map']:.4f}   strong mAP {results['strong_map']:.4f}")
+    print("\nFig. 5 (oracle mAP vs |E|, r=0.2):")
+    f5 = results["figure5"]
+    for e, m in zip(f5["context_sizes"], f5["curves"]["r=0.2"]["mean"]):
+        print(f"  |E|={e:4d}: {m:.4f}")
+    print("\nFig. 10 (normalized mAP, % of weak->strong gap closed):")
+    for name, cur in results["figure9_10"]["curves"].items():
+        pts = ", ".join(f"{v:.0f}" for v in cur["norm"][:6])
+        print(f"  {name:18s} [{pts}]  @ratios {results['figure9_10']['ratios'][:6]}")
+
+
+if __name__ == "__main__":
+    main()

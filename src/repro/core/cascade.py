@@ -1,0 +1,48 @@
+"""Generic weak/strong cascade orchestration (the paper's Fig. 4 pipeline).
+
+Domain-agnostic: a ``Cascade`` pairs a weak inference fn, a reward-estimate
+fn (reading only weak output), a strong inference fn, and a decision policy.
+Used (a) by the detection repro and (b) by LM cascade/early-exit serving in
+``repro.serving.cascade_serving``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policy import ThresholdPolicy
+
+
+@dataclass
+class CascadeRecord:
+    """Per-item trace for accounting/latency breakdown (paper Table III)."""
+
+    estimate: float
+    offloaded: bool
+    weak_output: Any
+    final_output: Any
+
+
+@dataclass
+class Cascade:
+    weak_fn: Callable[[Any], Any]
+    estimate_fn: Callable[[Any], float]  # weak output -> reward estimate
+    strong_fn: Callable[[Any], Any]
+    policy: ThresholdPolicy
+
+    def process(self, item: Any) -> CascadeRecord:
+        weak_out = self.weak_fn(item)
+        est = float(self.estimate_fn(weak_out))
+        offload = self.policy.decide(est)
+        final = self.strong_fn(item) if offload else weak_out
+        return CascadeRecord(est, offload, weak_out, final)
+
+    def run(self, items: Iterable[Any]) -> List[CascadeRecord]:
+        return [self.process(it) for it in items]
+
+    def offload_ratio(self, records: List[CascadeRecord]) -> float:
+        if not records:
+            return 0.0
+        return float(np.mean([r.offloaded for r in records]))

@@ -1,0 +1,182 @@
+"""Reward estimators (paper §V): MLP regressor with MORIC weighted-MSE loss.
+
+The deployable artifact is a small MLP that maps weak-detector features to a
+predicted (M)ORIC value.  Training uses the paper's Eq. 7 weighted MSE
+(weights = targets, emphasising high-reward images) when ``weighted=True``;
+the "vanilla" ablation of Fig. 9 sets ``weighted=False`` and regresses the
+untransformed reward.
+
+A small CNN estimator over feature maps is also provided for the §V-A input
+study (hidden-layer inputs / early-exit integration).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.adamw import adamw_init, adamw_update
+from repro.train.schedule import warmup_cosine
+
+PyTree = dict
+
+
+def _dense_init(key, fan_in: int, fan_out: int) -> Dict[str, jnp.ndarray]:
+    wkey, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / fan_in)
+    return {
+        "w": jax.random.normal(wkey, (fan_in, fan_out), jnp.float32) * scale,
+        "b": jnp.zeros((fan_out,), jnp.float32),
+    }
+
+
+def mlp_init(key, in_dim: int, hidden: Sequence[int] = (128, 64)) -> PyTree:
+    params = {}
+    dims = [in_dim, *hidden, 1]
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"layer{i}"] = _dense_init(keys[i], a, b)
+    return params
+
+
+def mlp_apply(params: PyTree, x: jnp.ndarray, *, sigmoid_out: bool) -> jnp.ndarray:
+    n_layers = len(params)
+    h = x
+    for i in range(n_layers):
+        p = params[f"layer{i}"]
+        h = h @ p["w"] + p["b"]
+        if i < n_layers - 1:
+            h = jax.nn.gelu(h)
+    out = h[..., 0]
+    return jax.nn.sigmoid(out) if sigmoid_out else out
+
+
+def weighted_mse_loss(
+    params: PyTree, x: jnp.ndarray, y: jnp.ndarray, *, weighted: bool, sigmoid_out: bool
+) -> jnp.ndarray:
+    """Eq. 7: Σ_i y_i · (e(x_i) − y_i)² (mean-reduced); plain MSE if unweighted."""
+    pred = mlp_apply(params, x, sigmoid_out=sigmoid_out)
+    err = jnp.square(pred - y)
+    if weighted:
+        err = jnp.maximum(y, 0.0) * err
+    return jnp.mean(err)
+
+
+@dataclass
+class EstimatorConfig:
+    hidden: Tuple[int, ...] = (256, 128)
+    weighted: bool = True  # Eq. 7 loss
+    sigmoid_out: bool = True  # targets are MORIC ranks in [0, 1]
+    lr: float = 2e-3
+    weight_decay: float = 1e-4
+    epochs: int = 80
+    batch_size: int = 256
+    standardize: bool = True
+    seed: int = 0
+
+
+class RewardEstimator:
+    """Train/eval wrapper around the MLP; the on-device inference path is
+    mirrored by the fused Pallas kernel in ``repro.kernels.estimator_mlp``."""
+
+    def __init__(self, in_dim: int, config: EstimatorConfig = EstimatorConfig()):
+        self.config = config
+        self.in_dim = in_dim
+        key = jax.random.PRNGKey(config.seed)
+        self.params = mlp_init(key, in_dim, config.hidden)
+        self._predict = jax.jit(
+            functools.partial(mlp_apply, sigmoid_out=config.sigmoid_out)
+        )
+        self._mu = np.zeros((in_dim,), np.float32)
+        self._sigma = np.ones((in_dim,), np.float32)
+
+    def fit(
+        self,
+        x: np.ndarray,
+        y: np.ndarray,
+        log_every: int = 0,
+    ) -> List[float]:
+        cfg = self.config
+        if cfg.standardize:
+            self._mu = np.asarray(x, np.float32).mean(axis=0)
+            self._sigma = np.asarray(x, np.float32).std(axis=0) + 1e-6
+            x = (x - self._mu) / self._sigma
+        x = jnp.asarray(x, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        n = x.shape[0]
+        steps_per_epoch = max(n // cfg.batch_size, 1)
+        total = cfg.epochs * steps_per_epoch
+        sched = warmup_cosine(cfg.lr, max(total // 20, 1), total)
+        opt_state = adamw_init(self.params)
+        loss_fn = functools.partial(
+            weighted_mse_loss, weighted=cfg.weighted, sigmoid_out=cfg.sigmoid_out
+        )
+
+        @jax.jit
+        def step(params, opt_state, xb, yb, lr):
+            loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+            params, opt_state = adamw_update(
+                grads, opt_state, params, lr, weight_decay=cfg.weight_decay
+            )
+            return params, opt_state, loss
+
+        rng = np.random.default_rng(cfg.seed)
+        losses: List[float] = []
+        params = self.params
+        it = 0
+        for _ in range(cfg.epochs):
+            perm = rng.permutation(n)
+            for s in range(steps_per_epoch):
+                idx = perm[s * cfg.batch_size : (s + 1) * cfg.batch_size]
+                params, opt_state, loss = step(
+                    params, opt_state, x[idx], y[idx], sched(it)
+                )
+                it += 1
+                losses.append(float(loss))
+                if log_every and it % log_every == 0:
+                    print(f"  estimator step {it}/{total} loss {float(loss):.5f}")
+        self.params = params
+        return losses
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        if self.config.standardize:
+            x = (x - self._mu) / self._sigma
+        return np.asarray(self._predict(self.params, jnp.asarray(x, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# CNN estimator over feature maps (paper §V-A hidden-layer input study)
+# ---------------------------------------------------------------------------
+
+def cnn_init(key, in_channels: int, width: int = 16) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    def conv(key, cin, cout):
+        return {
+            "w": jax.random.normal(key, (3, 3, cin, cout), jnp.float32)
+            * jnp.sqrt(2.0 / (9 * cin)),
+            "b": jnp.zeros((cout,), jnp.float32),
+        }
+    return {
+        "conv0": conv(k1, in_channels, width),
+        "conv1": conv(k2, width, 2 * width),
+        "head": _dense_init(k3, 2 * width, 1),
+    }
+
+
+def cnn_apply(params: PyTree, fmap: jnp.ndarray) -> jnp.ndarray:
+    """fmap: (B, H, W, C) -> (B,) sigmoid reward estimate."""
+    h = fmap
+    for name in ("conv0", "conv1"):
+        p = params[name]
+        h = jax.lax.conv_general_dilated(
+            h, p["w"], window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + p["b"]
+        h = jax.nn.gelu(h)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    out = h @ params["head"]["w"] + params["head"]["b"]
+    return jax.nn.sigmoid(out[..., 0])

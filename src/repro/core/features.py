@@ -1,0 +1,73 @@
+"""Estimator input features from the weak detector's output (paper §V-A).
+
+Mirrors [13]: features of the top-K (default 25) bounding boxes ranked by
+confidence, concatenated with global summary statistics.  Per box:
+``[score, cx, cy, w, h, area, aspect, onehot(class)]``; global:
+``[num_boxes/K, mean score, max score, score entropy, class histogram]``.
+Everything is derived exclusively from the weak detector's result — the
+constraint the paper imposes on a deployable estimator.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.detection.map_engine import Detections
+
+
+def feature_dim(num_classes: int, top_k: int = 25) -> int:
+    per_box = 7 + num_classes
+    global_dim = 4 + num_classes
+    return top_k * per_box + global_dim
+
+
+def extract_features(
+    det: Detections,
+    num_classes: int,
+    top_k: int = 25,
+    image_size: float = 1.0,
+) -> np.ndarray:
+    """Fixed-size feature vector for one image's weak detections."""
+    det = det.top_k(top_k)
+    n = len(det)
+    per_box = 7 + num_classes
+    feats = np.zeros((top_k, per_box), dtype=np.float32)
+    if n:
+        b = det.boxes / image_size
+        cx = (b[:, 0] + b[:, 2]) / 2
+        cy = (b[:, 1] + b[:, 3]) / 2
+        w = np.maximum(b[:, 2] - b[:, 0], 0)
+        h = np.maximum(b[:, 3] - b[:, 1], 0)
+        area = w * h
+        aspect = w / np.maximum(h, 1e-6)
+        feats[:n, 0] = det.scores
+        feats[:n, 1] = cx
+        feats[:n, 2] = cy
+        feats[:n, 3] = w
+        feats[:n, 4] = h
+        feats[:n, 5] = area
+        feats[:n, 6] = np.clip(aspect, 0, 10) / 10.0
+        cls = np.clip(det.classes, 0, num_classes - 1)
+        feats[np.arange(n), 7 + cls] = 1.0
+    hist = np.zeros(num_classes, dtype=np.float32)
+    if n:
+        np.add.at(hist, np.clip(det.classes, 0, num_classes - 1), 1.0)
+        hist /= n
+        s = det.scores / max(det.scores.sum(), 1e-9)
+        entropy = float(-(s * np.log(np.maximum(s, 1e-12))).sum())
+        glob = np.array(
+            [n / top_k, float(det.scores.mean()), float(det.scores.max()), entropy],
+            dtype=np.float32,
+        )
+    else:
+        glob = np.zeros(4, dtype=np.float32)
+    return np.concatenate([feats.reshape(-1), glob, hist])
+
+
+def extract_features_batch(
+    dets: Sequence[Detections], num_classes: int, top_k: int = 25, image_size: float = 1.0
+) -> np.ndarray:
+    return np.stack(
+        [extract_features(d, num_classes, top_k, image_size) for d in dets]
+    )

@@ -1,0 +1,150 @@
+"""ORIC / ORI offloading reward metrics (paper §IV) + MORIC transform (§V-B).
+
+``RewardOracle`` owns the context set ``E`` (weak-detector results on images
+sampled uniformly without replacement from a reference pool — the paper uses
+the detector's training distribution) and computes, per image ``i``:
+
+    mAPC_i(d)  = mAP({h_{i,d}} ∪ H_{E,w})                       (Eq. 4)
+    ORIC_i     = (|E|+1) · (mAPC_i(s) − mAPC_i(w))              (Eq. 5)
+    ORI_i      = mAPI_i(s) − mAPI_i(w)    (E = ∅ special case)  (Eq. 1)
+
+and the rank transform MORIC_i = cdf(ORIC_i)                    (Eq. 6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.detection.map_engine import (
+    APAccumulator,
+    Detections,
+    GroundTruth,
+    ImageEval,
+    match_detections,
+)
+
+
+@dataclass
+class MatchedImage:
+    """Pre-matched weak/strong evaluations for one image (matching is
+    per-image, so it is done once and reused across context draws)."""
+
+    weak: ImageEval
+    strong: ImageEval
+
+
+def match_pairs(
+    weak_dets: Sequence[Detections],
+    strong_dets: Sequence[Detections],
+    gts: Sequence[GroundTruth],
+    iou_thresholds: Sequence[float] = (0.5,),
+) -> List[MatchedImage]:
+    out = []
+    for dw, ds, gt in zip(weak_dets, strong_dets, gts):
+        out.append(
+            MatchedImage(
+                weak=match_detections(dw, gt, iou_thresholds),
+                strong=match_detections(ds, gt, iou_thresholds),
+            )
+        )
+    return out
+
+
+class RewardOracle:
+    """Computes exact ORIC (and ORI as the E=∅ degenerate case)."""
+
+    def __init__(
+        self,
+        context_evals: Sequence[ImageEval],
+        iou_thresholds: Sequence[float] = (0.5,),
+    ) -> None:
+        self.iou_thresholds = tuple(iou_thresholds)
+        self.context_size = len(context_evals)
+        self._acc = APAccumulator(self.iou_thresholds)
+        for ev in context_evals:
+            self._acc.add(ev)
+
+    @classmethod
+    def from_pool(
+        cls,
+        pool_weak_evals: Sequence[ImageEval],
+        context_size: int,
+        rng: np.random.Generator,
+        iou_thresholds: Sequence[float] = (0.5,),
+    ) -> "RewardOracle":
+        """Sample E uniformly without replacement from a weak-result pool."""
+        n = len(pool_weak_evals)
+        k = min(context_size, n)
+        idx = rng.choice(n, size=k, replace=False)
+        return cls([pool_weak_evals[int(i)] for i in idx], iou_thresholds)
+
+    def mapc(self, ev: ImageEval) -> float:
+        """mAP of {image} ∪ context (Eq. 4)."""
+        return self._acc.map_with_image(ev)
+
+    def oric(self, img: MatchedImage) -> float:
+        """Eq. 5 — (|E|+1)·(mAPC_s − mAPC_w)."""
+        scale = self.context_size + 1
+        return scale * (self.mapc(img.strong) - self.mapc(img.weak))
+
+    def oric_batch(self, imgs: Sequence[MatchedImage]) -> np.ndarray:
+        return np.array([self.oric(im) for im in imgs])
+
+
+def ori(img: MatchedImage, iou_thresholds: Sequence[float] = (0.5,)) -> float:
+    """ORI (Eq. 1 difference): per-image mAPI_s − mAPI_w, no context."""
+    empty = APAccumulator(iou_thresholds)
+    return empty.map_with_image(img.strong) - empty.map_with_image(img.weak)
+
+
+def ori_batch(
+    imgs: Sequence[MatchedImage], iou_thresholds: Sequence[float] = (0.5,)
+) -> np.ndarray:
+    return np.array([ori(im, iou_thresholds) for im in imgs])
+
+
+class CdfTransform:
+    """Empirical-CDF rank transform (Eq. 6): MORIC = cdf(ORIC) ∈ [0, 1].
+
+    Fit on training rewards; evaluation rewards are mapped by interpolating
+    the fitted CDF (mid-rank convention so ties at 0 spread evenly is NOT
+    applied — the paper notes exact-0 mass defeats the transform for ORI,
+    which we reproduce)."""
+
+    def __init__(self, train_rewards: np.ndarray) -> None:
+        r = np.sort(np.asarray(train_rewards, dtype=np.float64))
+        self._sorted = r
+        self._n = r.size
+
+    def __call__(self, rewards: np.ndarray) -> np.ndarray:
+        rewards = np.asarray(rewards, dtype=np.float64)
+        # P(R <= r): right-continuous empirical CDF
+        ranks = np.searchsorted(self._sorted, rewards, side="right")
+        return ranks / max(self._n, 1)
+
+
+def cascade_map(
+    imgs: Sequence[MatchedImage],
+    offload_mask: np.ndarray,
+    iou_thresholds: Sequence[float] = (0.5,),
+) -> float:
+    """Overall mAP of the weak/strong combination given offload decisions
+    (the objective of Eq. 2/3)."""
+    acc = APAccumulator(iou_thresholds)
+    for im, off in zip(imgs, offload_mask):
+        acc.add(im.strong if off else im.weak)
+    return acc.map()
+
+
+def topk_offload_mask(scores: np.ndarray, ratio: float) -> np.ndarray:
+    """Offload the images whose score is in the top ``ratio`` fraction
+    (threshold T = (1-r)-quantile of the scores, paper §III)."""
+    n = scores.size
+    k = int(round(ratio * n))
+    mask = np.zeros(n, dtype=bool)
+    if k > 0:
+        idx = np.argsort(-scores, kind="stable")[:k]
+        mask[idx] = True
+    return mask

@@ -1,0 +1,13 @@
+"""Data pipelines: procedural detection dataset, LM token synthesis, and
+modality-frontend stubs for the [audio]/[vlm] architectures."""
+from repro.data.shapes import ShapesDataset, render_image
+from repro.data.lm_synth import synth_lm_batch
+from repro.data.modality_stubs import audio_frame_embeddings, vision_patch_embeddings
+
+__all__ = [
+    "ShapesDataset",
+    "render_image",
+    "synth_lm_batch",
+    "audio_frame_embeddings",
+    "vision_patch_embeddings",
+]

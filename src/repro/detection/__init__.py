@@ -1,0 +1,38 @@
+"""Detection substrate: box ops, matching, mAP engine, TIDE errors, NMS.
+
+Two layers:
+  * ``boxes`` — jnp, jit-able, used inside models/losses and Pallas refs.
+  * ``map_engine`` / ``tide`` — numpy, host-side evaluation (variable-length
+    detection lists), used by the ORIC reward machinery in ``repro.core``.
+"""
+from repro.detection.boxes import (
+    box_area,
+    box_iou,
+    box_iou_np,
+    cxcywh_to_xyxy,
+    xyxy_to_cxcywh,
+)
+from repro.detection.map_engine import (
+    Detections,
+    GroundTruth,
+    average_precision,
+    dataset_map,
+    match_detections,
+)
+from repro.detection.nms import nms
+from repro.detection.tide import tide_errors
+
+__all__ = [
+    "box_area",
+    "box_iou",
+    "box_iou_np",
+    "cxcywh_to_xyxy",
+    "xyxy_to_cxcywh",
+    "Detections",
+    "GroundTruth",
+    "average_precision",
+    "dataset_map",
+    "match_detections",
+    "nms",
+    "tide_errors",
+]

@@ -1,0 +1,56 @@
+"""Box geometry ops. jnp versions are jit-able; _np versions host-side.
+
+Boxes are ``[x1, y1, x2, y2]`` with ``x2 >= x1`` and ``y2 >= y1``, in
+normalized or pixel coordinates (the math is scale-free).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def box_area(boxes: jnp.ndarray) -> jnp.ndarray:
+    """Area of ``(..., 4)`` xyxy boxes."""
+    w = jnp.maximum(boxes[..., 2] - boxes[..., 0], 0.0)
+    h = jnp.maximum(boxes[..., 3] - boxes[..., 1], 0.0)
+    return w * h
+
+
+def box_iou(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise IoU between ``a: (N, 4)`` and ``b: (M, 4)`` -> ``(N, M)``."""
+    lt = jnp.maximum(a[:, None, :2], b[None, :, :2])  # (N, M, 2)
+    rb = jnp.minimum(a[:, None, 2:], b[None, :, 2:])
+    wh = jnp.maximum(rb - lt, 0.0)
+    inter = wh[..., 0] * wh[..., 1]
+    union = box_area(a)[:, None] + box_area(b)[None, :] - inter
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1e-12), 0.0)
+
+
+def box_iou_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Numpy pairwise IoU, ``(N, 4) x (M, 4) -> (N, M)``."""
+    a = np.asarray(a, dtype=np.float64).reshape(-1, 4)
+    b = np.asarray(b, dtype=np.float64).reshape(-1, 4)
+    lt = np.maximum(a[:, None, :2], b[None, :, :2])
+    rb = np.minimum(a[:, None, 2:], b[None, :, 2:])
+    wh = np.clip(rb - lt, 0.0, None)
+    inter = wh[..., 0] * wh[..., 1]
+    area_a = np.clip(a[:, 2] - a[:, 0], 0, None) * np.clip(a[:, 3] - a[:, 1], 0, None)
+    area_b = np.clip(b[:, 2] - b[:, 0], 0, None) * np.clip(b[:, 3] - b[:, 1], 0, None)
+    union = area_a[:, None] + area_b[None, :] - inter
+    out = np.zeros_like(inter)
+    np.divide(inter, union, out=out, where=union > 0)
+    return out
+
+
+def cxcywh_to_xyxy(boxes: jnp.ndarray) -> jnp.ndarray:
+    cx, cy, w, h = jnp.split(boxes, 4, axis=-1)
+    return jnp.concatenate(
+        [cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2], axis=-1
+    )
+
+
+def xyxy_to_cxcywh(boxes: jnp.ndarray) -> jnp.ndarray:
+    x1, y1, x2, y2 = jnp.split(boxes, 4, axis=-1)
+    return jnp.concatenate(
+        [(x1 + x2) / 2, (y1 + y2) / 2, x2 - x1, y2 - y1], axis=-1
+    )

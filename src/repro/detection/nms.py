@@ -1,0 +1,43 @@
+"""Fixed-size (jit-able) non-maximum suppression.
+
+Operates on padded detection tensors: ``boxes (N, 4)``, ``scores (N,)``,
+``classes (N,)``; suppressed entries get score 0.  Class-aware: boxes only
+suppress boxes of the same class.  Implemented as a ``jax.lax.fori_loop``
+over the score-sorted list so it lowers cleanly (no dynamic shapes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.detection.boxes import box_iou
+
+
+def nms(
+    boxes: jnp.ndarray,
+    scores: jnp.ndarray,
+    classes: jnp.ndarray,
+    iou_threshold: float = 0.5,
+    score_threshold: float = 0.0,
+) -> jnp.ndarray:
+    """Returns a keep mask ``(N,)`` of bools."""
+    n = boxes.shape[0]
+    order = jnp.argsort(-scores)
+    boxes_s = boxes[order]
+    scores_s = scores[order]
+    classes_s = classes[order]
+    iou = box_iou(boxes_s, boxes_s)
+    same_class = classes_s[:, None] == classes_s[None, :]
+    suppress_pair = (iou > iou_threshold) & same_class
+
+    def body(i, keep):
+        # i suppresses all later boxes it overlaps, if i itself is kept
+        row = suppress_pair[i] & (jnp.arange(n) > i)
+        return jnp.where(keep[i], keep & ~row, keep)
+
+    keep_sorted = jax.lax.fori_loop(
+        0, n, body, scores_s > score_threshold
+    )
+    # scatter back to the original order
+    keep = jnp.zeros((n,), dtype=bool).at[order].set(keep_sorted)
+    return keep

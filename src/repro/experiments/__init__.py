@@ -1,0 +1,1 @@
+"""End-to-end experiment drivers reproducing the paper's tables/figures."""

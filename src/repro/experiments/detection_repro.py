@@ -1,0 +1,509 @@
+"""The faithful end-to-end reproduction pipeline (paper §IV–§V).
+
+Stages (all cached under ``artifacts/``):
+  1. generate procedural train/val/pool splits,
+  2. train weak + strong detectors,
+  3. run both detectors over val + pool,
+  4. compute ORI / ORIC oracles, the MORIC transform, train estimators,
+  5. evaluate every policy (oracle + estimated + baselines) across ratios.
+
+Each paper figure/table has a ``figure_*``/``table_*`` function reading from
+the cached pipeline state; ``benchmarks/`` and ``examples/`` call into these.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (
+    AdaptiveFeedingSVM,
+    CdfTransform,
+    EstimatorConfig,
+    MatchedImage,
+    RewardEstimator,
+    RewardOracle,
+    cascade_map,
+    dcsb_signals,
+    extract_features_batch,
+    fit_dcsb,
+    match_pairs,
+    ori_batch,
+    random_offload_mask,
+    topk_offload_mask,
+)
+from repro.data.shapes import NUM_CLASSES, ShapesDataset
+from repro.detection.map_engine import Detections, dataset_map
+from repro.detection.tide import tide_errors
+from repro.models.detector import STRONG, WEAK, decode_detections
+from repro.train.checkpoint import load_pytree, save_pytree
+from repro.train.trainer import train_detector
+
+ARTIFACTS = os.environ.get("REPRO_ARTIFACTS", os.path.join(os.path.dirname(__file__), "../../../artifacts"))
+
+
+@dataclass
+class PipelineState:
+    """Everything downstream experiments need, detector-free."""
+
+    val_pairs: List[MatchedImage]
+    pool_weak_evals: list
+    weak_dets_val: List[Detections]
+    strong_dets_val: List[Detections]
+    val_gts: list
+    weak_map: float
+    strong_map: float
+    features_val: np.ndarray
+    image_size: float
+
+
+def _cache_path(name: str) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    return os.path.join(ARTIFACTS, name)
+
+
+def build_pipeline(
+    n_train: int = 3000,
+    n_val: int = 2000,
+    n_pool: int = 1200,
+    steps_weak: int = 500,
+    steps_strong: int = 900,
+    seed: int = 0,
+    force: bool = False,
+    verbose: bool = True,
+) -> PipelineState:
+    cache = _cache_path("pipeline_state.pkl")
+    if os.path.exists(cache) and not force:
+        with open(cache, "rb") as f:
+            return pickle.load(f)
+
+    if verbose:
+        print("[pipeline] generating data ...")
+    train = ShapesDataset.generate(n_train, seed=seed)
+    val = ShapesDataset.generate(n_val, seed=seed + 1)
+    pool = ShapesDataset.generate(n_pool, seed=seed + 2)
+
+    params: Dict[str, dict] = {}
+    for cfg, steps in ((WEAK, steps_weak), (STRONG, steps_strong)):
+        ckpt = _cache_path(f"detector_{cfg.name}.npz")
+        if verbose:
+            print(f"[pipeline] training {cfg.name} detector ({steps} steps) ...")
+        p, _ = train_detector(cfg, train, steps=steps, seed=seed + 10)
+        save_pytree(ckpt, p)
+        params[cfg.name] = p
+
+    if verbose:
+        print("[pipeline] running inference on val + pool ...")
+    weak_val = decode_detections(params["weak"], WEAK, val.images)
+    strong_val = decode_detections(params["strong"], STRONG, val.images)
+    weak_pool = decode_detections(params["weak"], WEAK, pool.images)
+
+    val_pairs = match_pairs(weak_val, strong_val, val.gts)
+    from repro.detection.map_engine import match_detections
+
+    pool_weak_evals = [
+        match_detections(d, g, (0.5,)) for d, g in zip(weak_pool, pool.gts)
+    ]
+    weak_map = dataset_map(weak_val, val.gts)
+    strong_map = dataset_map(strong_val, val.gts)
+    if verbose:
+        print(f"[pipeline] weak mAP={weak_map:.4f} strong mAP={strong_map:.4f}")
+    feats = extract_features_batch(
+        weak_val, NUM_CLASSES, image_size=float(WEAK.image_size)
+    )
+    state = PipelineState(
+        val_pairs=val_pairs,
+        pool_weak_evals=pool_weak_evals,
+        weak_dets_val=weak_val,
+        strong_dets_val=strong_val,
+        val_gts=val.gts,
+        weak_map=weak_map,
+        strong_map=strong_map,
+        features_val=feats,
+        image_size=float(WEAK.image_size),
+    )
+    with open(cache, "wb") as f:
+        pickle.dump(state, f)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Paper figure/table analogues
+# ---------------------------------------------------------------------------
+
+def figure5_context_size(
+    state: PipelineState,
+    context_sizes: Sequence[int] = (0, 25, 50, 100, 200, 400, 800),
+    ratios: Sequence[float] = (0.1, 0.2, 0.5),
+    n_draws: int = 5,
+    seed: int = 0,
+) -> Dict:
+    """Oracle mAP vs |E| for ORIC (|E|=0 == ORI), per offloading ratio."""
+    rng = np.random.default_rng(seed)
+    out: Dict = {"context_sizes": list(context_sizes), "ratios": list(ratios),
+                 "weak_map": state.weak_map, "strong_map": state.strong_map,
+                 "curves": {}}
+    # rewards once per (E, draw); reuse across ratios
+    rewards_by_size: Dict[int, List[np.ndarray]] = {}
+    for E in context_sizes:
+        draws = 1 if E == 0 else n_draws
+        rewards_by_size[E] = [
+            RewardOracle.from_pool(state.pool_weak_evals, E, rng).oric_batch(
+                state.val_pairs
+            )
+            for _ in range(draws)
+        ]
+    for r in ratios:
+        means, cis = [], []
+        for E in context_sizes:
+            vals = np.array(
+                [
+                    cascade_map(state.val_pairs, topk_offload_mask(rw, r))
+                    for rw in rewards_by_size[E]
+                ]
+            )
+            means.append(float(vals.mean()))
+            cis.append(float(1.96 * vals.std() / np.sqrt(max(len(vals), 1))))
+        out["curves"][f"r={r}"] = {"mean": means, "ci95": cis}
+    return out
+
+
+def table2_conservatism(
+    state: PipelineState, context_size: int = 800, seed: int = 0
+) -> Dict:
+    """Weak/strong mAP on reward<=0 vs reward>0 subsets, ORIC vs ORI."""
+    rng = np.random.default_rng(seed)
+    oracle = RewardOracle.from_pool(state.pool_weak_evals, context_size, rng)
+    oric = oracle.oric_batch(state.val_pairs)
+    ori_r = ori_batch(state.val_pairs)
+    out: Dict = {}
+    n = len(state.val_pairs)
+    for name, rewards in (("ORIC", oric), ("ORI", ori_r)):
+        for label, mask in (
+            ("nonpos", rewards <= 0),
+            ("pos", rewards > 0),
+        ):
+            idx = np.where(mask)[0]
+            sub = [state.val_pairs[i] for i in idx]
+            out[f"{name}_{label}"] = {
+                "pct": float(mask.mean() * 100),
+                "weak_map": cascade_map(sub, np.zeros(len(sub), bool)) if len(sub) else float("nan"),
+                "strong_map": cascade_map(sub, np.ones(len(sub), bool)) if len(sub) else float("nan"),
+            }
+    return out
+
+
+def figure6_error_types(
+    state: PipelineState, ratio: float = 0.2, context_size: int = 800, seed: int = 0
+) -> Dict:
+    """TIDE 6-category error decomposition of weak/strong/ORI/ORIC cascades."""
+    rng = np.random.default_rng(seed)
+    oracle = RewardOracle.from_pool(state.pool_weak_evals, context_size, rng)
+    oric = oracle.oric_batch(state.val_pairs)
+    ori_r = ori_batch(state.val_pairs)
+    configs = {
+        "weak": np.zeros(len(state.val_pairs), bool),
+        "strong": np.ones(len(state.val_pairs), bool),
+        "ORI": topk_offload_mask(ori_r, ratio),
+        "ORIC": topk_offload_mask(oric, ratio),
+    }
+    out: Dict = {}
+    for name, mask in configs.items():
+        dets = [
+            state.strong_dets_val[i] if mask[i] else state.weak_dets_val[i]
+            for i in range(len(mask))
+        ]
+        out[name] = tide_errors(dets, state.val_gts)
+    return out
+
+
+def figure8_reward_cdf(state: PipelineState, context_size: int = 800, seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    oracle = RewardOracle.from_pool(state.pool_weak_evals, context_size, rng)
+    oric = oracle.oric_batch(state.val_pairs)
+    ori_r = ori_batch(state.val_pairs)
+    qs = np.linspace(0, 1, 21)
+    return {
+        "oric_quantiles": np.quantile(oric, qs).tolist(),
+        "ori_quantiles": np.quantile(ori_r, qs).tolist(),
+        "oric_frac_zero": float(np.mean(np.abs(oric) < 1e-9)),
+        "ori_frac_zero": float(np.mean(np.abs(ori_r) < 1e-9)),
+    }
+
+
+@dataclass
+class EstimatorBundle:
+    """Estimators trained with 5-fold CV; predictions are out-of-fold."""
+
+    preds: Dict[str, np.ndarray]
+    rewards: Dict[str, np.ndarray]
+
+
+def train_estimators(
+    state: PipelineState,
+    context_size: int = 800,
+    seed: int = 0,
+    folds: int = 5,
+    epochs: int = 40,
+) -> EstimatorBundle:
+    """Out-of-fold predictions for MORIC / vanilla-ORIC / ORI / MORI."""
+    rng = np.random.default_rng(seed)
+    oracle = RewardOracle.from_pool(state.pool_weak_evals, context_size, rng)
+    oric = oracle.oric_batch(state.val_pairs)
+    ori_r = ori_batch(state.val_pairs)
+    x = state.features_val
+    n = x.shape[0]
+    fold_ix = np.arange(n) % folds
+    rng.shuffle(fold_ix)
+
+    def oof(targets: np.ndarray, weighted: bool, sigmoid: bool, rank: bool) -> np.ndarray:
+        preds = np.zeros(n)
+        for f in range(folds):
+            tr = fold_ix != f
+            te = ~tr
+            t_tr = targets[tr]
+            if rank:
+                cdf = CdfTransform(t_tr)
+                y_tr = cdf(t_tr)
+            else:
+                y_tr = t_tr
+            est = RewardEstimator(
+                x.shape[1],
+                EstimatorConfig(weighted=weighted, sigmoid_out=sigmoid,
+                                epochs=epochs, seed=seed + f),
+            )
+            est.fit(x[tr], y_tr)
+            preds[te] = est.predict(x[te])
+        return preds
+
+    preds = {
+        "MORIC": oof(oric, weighted=True, sigmoid=True, rank=True),
+        "ORIC_vanilla": oof(oric, weighted=False, sigmoid=False, rank=False),
+        "ORI": oof(ori_r, weighted=False, sigmoid=False, rank=False),
+        "MORI": oof(ori_r, weighted=True, sigmoid=True, rank=True),
+    }
+    return EstimatorBundle(preds=preds, rewards={"ORIC": oric, "ORI": ori_r})
+
+
+def evaluate_policies(
+    state: PipelineState,
+    bundle: EstimatorBundle,
+    ratios: Sequence[float] = (0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.7, 1.0),
+    seed: int = 0,
+) -> Dict:
+    """mAP-vs-ratio for every policy (Fig. 9/10 analogue).  mAPs are also
+    reported normalized: 0% = weak alone, 100% = strong alone."""
+    rng = np.random.default_rng(seed)
+    n = len(state.val_pairs)
+    out: Dict = {
+        "ratios": list(ratios),
+        "weak_map": state.weak_map,
+        "strong_map": state.strong_map,
+        "curves": {},
+    }
+
+    def norm(m: float) -> float:
+        return 100.0 * (m - state.weak_map) / max(state.strong_map - state.weak_map, 1e-9)
+
+    policies: Dict[str, np.ndarray] = {
+        "oracle_ORIC": bundle.rewards["ORIC"],
+        "oracle_ORI": bundle.rewards["ORI"],
+        **{f"est_{k}": v for k, v in bundle.preds.items()},
+    }
+    for name, scores in policies.items():
+        maps = [cascade_map(state.val_pairs, topk_offload_mask(scores, r)) for r in ratios]
+        out["curves"][name] = {"map": maps, "norm": [norm(m) for m in maps]}
+    # random baseline (mean over 5 draws)
+    maps = []
+    for r in ratios:
+        vals = [
+            cascade_map(state.val_pairs, random_offload_mask(n, r, rng))
+            for _ in range(5)
+        ]
+        maps.append(float(np.mean(vals)))
+    out["curves"]["random"] = {"map": maps, "norm": [norm(m) for m in maps]}
+
+    # Adaptive Feeding: one SVM per c_plus; ratio is whatever the SVM yields
+    af_pts = []
+    difficult = bundle.rewards["ORI"] > 0
+    for c_plus in (2.0 ** e for e in range(-3, 3)):
+        svm = AdaptiveFeedingSVM(c_plus=float(c_plus), epochs=60).fit(
+            state.features_val, difficult
+        )
+        mask = svm.predict(state.features_val)
+        af_pts.append(
+            {"c_plus": float(c_plus), "ratio": float(mask.mean()),
+             "map": cascade_map(state.val_pairs, mask)}
+        )
+    for p in af_pts:
+        p["norm"] = norm(p["map"])
+    out["adaptive_feeding"] = af_pts
+
+    # DCSB: rule search fixes its own ratio
+    rule = fit_dcsb(state.weak_dets_val, state.strong_dets_val)
+    counts, areas = dcsb_signals(state.weak_dets_val)
+    mask = rule.predict_signals(counts, areas)
+    out["dcsb"] = {
+        "ratio": float(mask.mean()),
+        "map": cascade_map(state.val_pairs, mask),
+        "norm": norm(cascade_map(state.val_pairs, mask)),
+        "thr_count": rule.thr_count,
+        "thr_area": rule.thr_area,
+    }
+    return out
+
+
+def figure7_input_study(
+    state: PipelineState,
+    context_size: int = 800,
+    ratios: Sequence[float] = (0.1, 0.2, 0.3, 0.5),
+    seed: int = 0,
+    epochs: int = 30,
+    n_val: int = 2000,
+) -> Dict:
+    """§V-A input study: estimate MORIC from the weak detector's OUTPUT
+    (MLP on box features) vs from its backbone FEATURE MAPS (CNN) — the
+    early-exit integration point.  Paper finding: limited impact."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.estimator import cnn_apply, cnn_init
+    from repro.data.shapes import ShapesDataset
+    from repro.models.detector import WEAK, detector_forward
+    from repro.train.adamw import adamw_init, adamw_update
+    from repro.train.checkpoint import load_pytree
+    from repro.models.detector import detector_init
+
+    rng = np.random.default_rng(seed)
+    oracle = RewardOracle.from_pool(state.pool_weak_evals, context_size, rng)
+    oric = oracle.oric_batch(state.val_pairs)
+    cdf = CdfTransform(oric)
+    y = cdf(oric)
+
+    # recompute backbone feature maps for the val split (deterministic seed)
+    val = ShapesDataset.generate(n_val, seed=1)
+    wparams = detector_init(jax.random.PRNGKey(0), WEAK)
+    wparams = load_pytree(_cache_path("detector_weak.npz"), wparams)
+    feats = []
+    for s in range(0, n_val, 256):
+        _, _, _, fm = detector_forward(wparams, WEAK, jnp.asarray(val.images[s : s + 256]))
+        feats.append(np.asarray(fm))
+    fmaps = np.concatenate(feats)  # (N, G, G, C)
+
+    # 2-fold CV CNN regression with the Eq. 7 weighted loss
+    n = len(y)
+    fold = np.arange(n) % 2
+    rng.shuffle(fold)
+    preds_cnn = np.zeros(n)
+    for f in range(2):
+        tr, te = fold != f, fold == f
+        params = cnn_init(jax.random.PRNGKey(seed + f), fmaps.shape[-1])
+        opt = adamw_init(params)
+
+        def loss_fn(p, xb, yb):
+            pred = cnn_apply(p, xb)
+            return jnp.mean(jnp.maximum(yb, 0.0) * jnp.square(pred - yb))
+
+        step = jax.jit(
+            lambda p, o, xb, yb: (
+                lambda l, g: adamw_update(g, o, p, 2e-3) + (l,)
+            )(*jax.value_and_grad(loss_fn)(p, xb, yb))
+        )
+        xtr = jnp.asarray(fmaps[tr])
+        ytr = jnp.asarray(y[tr], jnp.float32)
+        idx = np.where(tr)[0]
+        for _ in range(epochs):
+            perm = rng.permutation(len(idx))
+            for s in range(0, len(perm) - 255, 256):
+                sel = perm[s : s + 256]
+                params, opt, _ = step(params, opt, xtr[sel], ytr[sel])
+        preds_cnn[te] = np.asarray(cnn_apply(params, jnp.asarray(fmaps[te])))
+
+    # reference: output-feature MLP (single fit/predict split to match)
+    preds_mlp = np.zeros(n)
+    for f in range(2):
+        tr, te = fold != f, fold == f
+        est = RewardEstimator(state.features_val.shape[1], EstimatorConfig(epochs=epochs))
+        est.fit(state.features_val[tr], y[tr])
+        preds_mlp[te] = est.predict(state.features_val[te])
+
+    out: Dict = {"ratios": list(ratios), "curves": {}}
+    for name, preds in (("output_mlp", preds_mlp), ("featmap_cnn", preds_cnn)):
+        out["curves"][name] = [
+            cascade_map(state.val_pairs, topk_offload_mask(preds, r)) for r in ratios
+        ]
+    return out
+
+
+def token_bucket_study(
+    state: PipelineState,
+    bundle: "EstimatorBundle",
+    rate: float = 0.2,
+    depth: float = 8.0,
+    seed: int = 0,
+) -> Dict:
+    """Dynamic-budget serving ([23]-style): a token bucket enforcing a hard
+    offload rate on a streaming trace vs the static threshold policy."""
+    from repro.core.policy import ThresholdPolicy, TokenBucket
+
+    rng = np.random.default_rng(seed)
+    est = bundle.preds["MORIC"]
+    order = rng.permutation(len(est))  # arrival order
+    # static threshold at the same target ratio
+    pol = ThresholdPolicy(est, ratio=rate)
+    static_mask = np.zeros(len(est), bool)
+    static_mask[order] = pol.decide_batch(est[order])
+    tb = TokenBucket(rate=rate, depth=depth, base_threshold=float(np.quantile(est, 1 - rate)))
+    tb_mask = np.zeros(len(est), bool)
+    for i in order:
+        tb_mask[i] = tb.decide(float(est[i]))
+    return {
+        "target_rate": rate,
+        "static": {"ratio": float(static_mask.mean()),
+                   "map": cascade_map(state.val_pairs, static_mask)},
+        "token_bucket": {"ratio": float(tb_mask.mean()),
+                         "map": cascade_map(state.val_pairs, tb_mask),
+                         "max_burst": depth},
+    }
+
+
+def run_all(force: bool = False, quick: bool = False) -> Dict:
+    """Full repro; writes artifacts/repro_results.json."""
+    kw = dict(n_train=1200, n_val=400, n_pool=500, steps_weak=250, steps_strong=400) if quick else {}
+    state = build_pipeline(force=force, **kw)
+    results: Dict = {
+        "weak_map": state.weak_map,
+        "strong_map": state.strong_map,
+    }
+    ctx = 400 if quick else 800
+    results["figure5"] = figure5_context_size(
+        state,
+        context_sizes=(0, 25, 100, ctx // 2, ctx) if quick else (0, 25, 50, 100, 200, 400, 800),
+        n_draws=3 if quick else 5,
+    )
+    results["table2"] = table2_conservatism(state, context_size=ctx)
+    results["figure6"] = figure6_error_types(state, context_size=ctx)
+    results["figure8"] = figure8_reward_cdf(state, context_size=ctx)
+    bundle = train_estimators(state, context_size=ctx, epochs=20 if quick else 40)
+    results["figure9_10"] = evaluate_policies(state, bundle)
+    if not quick:
+        results["figure7"] = figure7_input_study(state, context_size=ctx)
+        results["token_bucket"] = token_bucket_study(state, bundle)
+    path = _cache_path("repro_results.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[pipeline] wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    # run through the canonical module so pickled classes resolve on import
+    from repro.experiments import detection_repro as _mod
+
+    _mod.run_all(force="--force" in sys.argv, quick="--quick" in sys.argv)

@@ -1,0 +1,4 @@
+from repro.kernels.estimator_mlp.ops import estimator_mlp
+from repro.kernels.estimator_mlp.ref import estimator_mlp_ref
+
+__all__ = ["estimator_mlp", "estimator_mlp_ref"]

@@ -1,0 +1,44 @@
+"""jit'd wrapper: pads (B, F, H) to MXU-aligned multiples and calls the
+fused kernel; also adapts a trained ``RewardEstimator`` (128, 1)-hidden
+param dict when its shape matches the 2-layer form."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.estimator_mlp.kernel import estimator_mlp_pallas
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def estimator_mlp(
+    x: jnp.ndarray,  # (B, F)
+    w1: jnp.ndarray,  # (F, H)
+    b1: jnp.ndarray,  # (H,)
+    w2: jnp.ndarray,  # (H,)
+    b2: jnp.ndarray,  # ()
+    tile_b: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, F = x.shape
+    H = w1.shape[1]
+    Bp = -(-B // tile_b) * tile_b
+    Fp = -(-F // 128) * 128
+    Hp = -(-H // 128) * 128
+    x_p = _pad_to(_pad_to(x, Bp, 0), Fp, 1).astype(jnp.float32)
+    w1_p = _pad_to(_pad_to(w1, Fp, 0), Hp, 1).astype(jnp.float32)
+    b1_p = _pad_to(b1[None, :], Hp, 1).astype(jnp.float32)
+    w2_p = jnp.zeros((Hp, 128), jnp.float32).at[:H, 0].set(w2.astype(jnp.float32))
+    b2_p = jnp.zeros((1, 128), jnp.float32).at[0, 0].set(b2.astype(jnp.float32))
+    out = estimator_mlp_pallas(x_p, w1_p, b1_p, w2_p, b2_p, tile_b, interpret)
+    return out[:B, 0]

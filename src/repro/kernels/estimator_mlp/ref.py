@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: the estimator MLP forward (2-layer, GELU, sigmoid)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def estimator_mlp_ref(x, w1, b1, w2, b2) -> jnp.ndarray:
+    """x (B,F), w1 (F,H), b1 (H,), w2 (H,), b2 () -> (B,)."""
+    h = jax.nn.gelu(x @ w1 + b1)
+    return jax.nn.sigmoid(h @ w2 + b2)

@@ -1,0 +1,4 @@
+from repro.kernels.flash_sdpa.ops import flash_sdpa
+from repro.kernels.flash_sdpa.ref import flash_sdpa_ref
+
+__all__ = ["flash_sdpa", "flash_sdpa_ref"]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: flash (online-softmax) SDPA with causal + sliding
+window masking.
+
+The XLA path bounds attention residency by query-chunking (lax.map); the
+TPU-native version goes further: the (TQ, T) logits tile never exists —
+the kernel streams KV tiles through VMEM with running max/denominator
+(the flash-attention recurrence), emitting one (TQ, D) output block per
+grid step.  This is the hot kernel of the long_500k serving shape, where
+the window (8192) keys × 128 dims fit VMEM comfortably (8192·128·4·2 =
+8 MB for K and V).
+
+Grid: (B·H, S/TQ).  Per step: q (TQ, D) block; K/V (T, D) resident;
+fori_loop over T/TK tiles with running (m, l, acc) in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, *, tq: int, tk: int,
+                  causal: bool, window: int, q_offset: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # (TQ, D)
+    T = k_ref.shape[1]
+    D = q.shape[-1]
+    scale = 1.0 / (D ** 0.5)
+    qpos = q_offset + qi * tq + jax.lax.iota(jnp.int32, tq)  # (TQ,)
+
+    n_tiles = T // tk
+
+    def body(t, carry):
+        m, l, acc = carry  # (TQ,), (TQ,), (TQ, D)
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], t * tk, tk, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], t * tk, tk, axis=0)
+        s = (q @ k.astype(jnp.float32).T) * scale  # (TQ, TK)
+        kpos = t * tk + jax.lax.iota(jnp.int32, tk)
+        mask = jnp.ones((tq, tk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(jnp.where(mask, s - m_safe[:, None], -jnp.inf))
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((tq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((tq,), jnp.float32)
+    acc0 = jnp.zeros((tq, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def flash_sdpa_pallas(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,  # (BH, T, D)
+    v: jnp.ndarray,
+    tq: int = 128,
+    tk: int = 128,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, S, D = q.shape
+    T = k.shape[1]
+    assert S % tq == 0 and T % tk == 0, (S, T, tq, tk)
+    kern = functools.partial(
+        _flash_kernel, tq=tq, tk=tk, causal=causal, window=window,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(BH, S // tq),
+        in_specs=[
+            pl.BlockSpec((1, tq, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, T, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, T, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

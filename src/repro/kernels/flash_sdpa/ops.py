@@ -1,0 +1,49 @@
+"""jit'd wrapper: maps model-layout GQA tensors onto the kernel's
+(B·H, S, D) layout (each query head streams its kv head's K/V) and pads
+S/T to tile multiples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_sdpa.kernel import flash_sdpa_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tk", "causal", "window", "q_offset", "interpret")
+)
+def flash_sdpa(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, T, K, D)  GQA: H % K == 0
+    v: jnp.ndarray,
+    tq: int = 128,
+    tk: int = 128,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    Sp = -(-S // tq) * tq
+    Tp = -(-T // tk) * tk
+    qf = jnp.moveaxis(q, 1, 2).reshape(B * H, S, D)
+    kf = jnp.repeat(jnp.moveaxis(k, 1, 2), G, axis=1).reshape(B * H, T, D)
+    vf = jnp.repeat(jnp.moveaxis(v, 1, 2), G, axis=1).reshape(B * H, T, D)
+    if Sp != S:
+        qf = jnp.pad(qf, ((0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        # padded keys sit at positions >= T; causal masking with
+        # q_offset < T keeps them masked for all real queries
+        kf = jnp.pad(kf, ((0, 0), (0, Tp - T), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, Tp - T), (0, 0)))
+    out = flash_sdpa_pallas(
+        qf, kf, vf, tq=tq, tk=tk, causal=causal, window=window,
+        q_offset=q_offset, interpret=interpret,
+    )
+    out = out[:, :S].reshape(B, H, S, D)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: masked SDPA (same semantics as models.layers._sdpa
+restricted to one head per row)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_sdpa_ref(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,  # (BH, T, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    S, T, D = q.shape[1], k.shape[1], q.shape[2]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    qpos = q_offset + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.iou_matrix.ops import iou_matrix
+from repro.kernels.iou_matrix.ref import iou_matrix_ref
+
+__all__ = ["iou_matrix", "iou_matrix_ref"]

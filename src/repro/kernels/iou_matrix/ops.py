@@ -1,0 +1,28 @@
+"""jit'd wrapper: pads to tile multiples, transposes to the lane-aligned
+(4, N) layout, calls the Pallas kernel, crops."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.iou_matrix.kernel import iou_matrix_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_m", "interpret"))
+def iou_matrix(
+    a: jnp.ndarray,  # (N, 4)
+    b: jnp.ndarray,  # (M, 4)
+    tile_n: int = 256,
+    tile_m: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    N, M = a.shape[0], b.shape[0]
+    Np = -(-max(N, 1) // tile_n) * tile_n
+    Mp = -(-max(M, 1) // tile_m) * tile_m
+    # pad with degenerate boxes (zero area -> IoU 0)
+    a_p = jnp.zeros((Np, 4), a.dtype).at[:N].set(a)
+    b_p = jnp.zeros((Mp, 4), b.dtype).at[:M].set(b)
+    out = iou_matrix_pallas(a_p.T, b_p.T, tile_n, tile_m, interpret=interpret)
+    return out[:N, :M]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the IoU kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.detection.boxes import box_iou
+
+
+def iou_matrix_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: (N, 4), b: (M, 4) -> (N, M)."""
+    return box_iou(a, b)

@@ -1,0 +1,40 @@
+"""jit'd wrapper reshaping (B, T, H, ...) model tensors to the kernel's
+(B·H, T, ...) layout and broadcasting the per-head bonus."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6(
+    r: jnp.ndarray,  # (B, T, H, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B, T, H, V)
+    w: jnp.ndarray,  # (B, T, H, K)
+    u: jnp.ndarray,  # (H, K) per-head bonus
+    s0: jnp.ndarray,  # (B, H, K, V)
+    interpret: bool = True,
+):
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+
+    def fold(x):
+        return jnp.moveaxis(x, 1, 2).reshape(B * H, T, x.shape[-1])
+
+    u_b = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K, 1)
+    out, sT = wkv6_pallas(
+        fold(r).astype(jnp.float32),
+        fold(k).astype(jnp.float32),
+        fold(v).astype(jnp.float32),
+        fold(w).astype(jnp.float32),
+        u_b.astype(jnp.float32),
+        s0.reshape(B * H, K, V).astype(jnp.float32),
+        interpret=interpret,
+    )
+    out = jnp.moveaxis(out.reshape(B, H, T, V), 1, 2)  # (B, T, H, V)
+    return out, sT.reshape(B, H, K, V)

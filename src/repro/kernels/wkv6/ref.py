@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the WKV6 recurrence (scan form, as in
+repro.models.layers.rwkv6_time_mix's inner loop)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r/k/w: (BH, T, K); v: (BH, T, V); u: (BH, K, 1); s0: (BH, K, V).
+    Returns (out (BH, T, V), sT (BH, K, V))."""
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # (BH,K),(BH,K),(BH,V),(BH,K)
+        kv = kt[:, :, None] * vt[:, None, :]  # (BH,K,V)
+        out_t = ((state + u * kv) * rt[:, :, None]).sum(axis=1)  # (BH,V)
+        state = wt[:, :, None] * state + kv
+        return state, out_t
+
+    sT, out = jax.lax.scan(
+        step,
+        s0,
+        (
+            jnp.moveaxis(r, 1, 0),
+            jnp.moveaxis(k, 1, 0),
+            jnp.moveaxis(v, 1, 0),
+            jnp.moveaxis(w, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(out, 0, 1), sT

@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape).
+
+The four assigned shapes:
+
+  train_4k       seq= 4,096  global_batch=256   train_step
+  prefill_32k    seq=32,768  global_batch= 32   prefill_step
+  decode_32k     seq=32,768  global_batch=128   serve_step (1 token vs cache)
+  long_500k      seq=524,288 global_batch=  1   serve_step, sub-quadratic
+
+``long_500k`` swaps in the sliding-window (8192) attention variant for
+attention archs (repro.configs.long_context_variant); SSM/RWKV state decode
+needs no window.  No device memory is allocated here — everything is
+ShapeDtypeStruct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, long_context_variant
+from repro.models.lm import LMConfig, init_cache
+
+S = jax.ShapeDtypeStruct
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": {"seq_len": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "batch": 1, "kind": "decode"},
+}
+
+WINDOW = 8192  # sliding window for long_500k attention variants
+
+
+def resolve_config(arch: str, shape: str) -> LMConfig:
+    cfg = get_config(arch)
+    if shape == "long_500k":
+        cfg = long_context_variant(cfg, WINDOW)
+    return cfg
+
+
+def batch_specs(cfg: LMConfig, B: int, seq: int) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs."""
+    batch: Dict[str, Any] = {"tokens": S((B, seq), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = S((B, cfg.vision_tokens, cfg.d_model), cfg.act_dtype)
+        batch["positions_3d"] = S((3, B, seq), jnp.int32)
+    if cfg.arch_type == "encdec":
+        batch["audio_frames"] = S((B, cfg.encoder_frames, cfg.d_model), cfg.act_dtype)
+    return batch
+
+
+def input_specs(arch: str, shape: str) -> Tuple[LMConfig, Dict[str, Any]]:
+    """Returns (cfg, specs) where specs' structure depends on the shape kind:
+
+      train   -> {"batch": {tokens, labels, ...}}
+      prefill -> {"batch": {tokens, ...}}
+      decode  -> {"cache": <cache pytree>, "tokens": (B,), "pos": ()}
+    """
+    cfg = resolve_config(arch, shape)
+    meta = SHAPES[shape]
+    B, seq = meta["batch"], meta["seq_len"]
+    kind = meta["kind"]
+    if kind == "train":
+        batch = batch_specs(cfg, B, seq)
+        batch["labels"] = S((B, seq), jnp.int32)
+        return cfg, {"kind": kind, "batch": batch}
+    if kind == "prefill":
+        return cfg, {"kind": kind, "batch": batch_specs(cfg, B, seq)}
+    # decode: ONE token against a seq-deep cache
+    capacity = min(seq, cfg.window) if cfg.window > 0 else seq
+    cache = init_cache(cfg, B, capacity, abstract=True)
+    return cfg, {
+        "kind": kind,
+        "cache": cache,
+        "tokens": S((B,), jnp.int32),
+        "pos": S((), jnp.int32),
+        "capacity": capacity,
+    }

@@ -1,0 +1,38 @@
+"""Production mesh construction (TPU v5e-class target).
+
+A function (NOT a module-level constant) so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod: 2 pods = 512 chips, axes ("pod", "data", "model"); the batch
+shards over (pod, data) and params replicate across pods (DP) while the
+`model` axis carries tensor/expert parallelism within a pod — matching the
+paper's local-device/edge-tier split, where the `pod` axis separates tiers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Union
+
+import jax
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def logical_axes(*, multi_pod: bool = False) -> Dict[str, AxisVal]:
+    """Logical -> mesh axis mapping used by meshctx.constrain."""
+    return {
+        "batch": ("pod", "data") if multi_pod else "data",
+        "model": "model",
+        "expert": "model",  # expert-parallel over the model axis
+        "data_only": "data",
+    }
+
+
+# Hardware constants (per chip) for the roofline terms — TPU v5e class.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link

@@ -1,0 +1,55 @@
+"""Mesh context threading for sharding constraints inside model code.
+
+Model code calls ``constrain(x, "batch", None, "model")`` with *logical*
+axis names; the launcher binds logical -> mesh axes here.  With no mesh
+bound (single-device smoke tests) constraints are no-ops, so the same model
+code runs on 1 CPU device and on the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, AxisVal]]]:
+    return getattr(_state, "bound", None)
+
+
+@contextlib.contextmanager
+def bind_mesh(mesh: Mesh, logical_axes: Dict[str, AxisVal]):
+    """Bind a mesh + logical-axis mapping, e.g.
+    ``{"batch": ("pod", "data"), "model": "model"}``."""
+    prev = _current()
+    _state.bound = (mesh, logical_axes)
+    try:
+        yield
+    finally:
+        _state.bound = prev
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """with_sharding_constraint using logical axis names; no-op if unbound."""
+    bound = _current()
+    if bound is None:
+        return x
+    mesh, mapping = bound
+    spec = P(*[mapping.get(a) if a is not None else None for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical_axes: Optional[str]) -> Optional[NamedSharding]:
+    """NamedSharding for jit in_shardings/out_shardings; None if unbound."""
+    bound = _current()
+    if bound is None:
+        return None
+    mesh, mapping = bound
+    spec = P(*[mapping.get(a) if a is not None else None for a in logical_axes])
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,246 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Rules are matched against the flattened param path (e.g.
+``layers/attn/wq``) in order; first hit wins.  A spec axis is dropped
+(replicated) when the corresponding array dimension isn't divisible by the
+mesh axis size — the standard MaxText-style fallback, so e.g. kv-head dims
+smaller than the model axis replicate instead of failing to lower.
+"""
+from __future__ import annotations
+
+import fnmatch
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# (pattern, logical spec per dim). "model"/"batch"/"expert" are logical.
+PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embed is d_model-sharded: a vocab-sharded table makes the token
+    # lookup lower to a full-vocab f32 one-hot matmul whose fwd/bwd
+    # all-reduces (B,S,V) f32 per step — found in §Perf hillclimb #1
+    ("*embed", (None, "model")),
+    ("*unembed", (None, "model")),
+    # attention
+    ("*attn/wq", (None, "model")),
+    ("*attn/wk", (None, "model")),
+    ("*attn/wv", (None, "model")),
+    ("*attn/wo", ("model", None)),
+    ("*attn/bq", ("model",)),
+    ("*attn/bk", ("model",)),
+    ("*attn/bv", ("model",)),
+    # MLA
+    ("*attn/w_dkv", (None, "model")),
+    ("*attn/w_kr", (None, None)),
+    ("*attn/w_uk", (None, "model")),
+    ("*attn/w_uv", (None, "model")),
+    # MLP
+    ("*mlp/gate", (None, "model")),
+    ("*mlp/up", (None, "model")),
+    ("*mlp/down", ("model", None)),
+    ("*mlp/up_b", ("model",)),
+    ("*mlp/down_b", (None,)),
+    # MoE (leading expert dim -> expert parallel)
+    ("*moe/router", (None, None)),
+    ("*moe/w_gate", ("expert", None, None)),
+    ("*moe/w_up", ("expert", None, None)),
+    ("*moe/w_down", ("expert", None, None)),
+    ("*moe/shared/gate", (None, "model")),
+    ("*moe/shared/up", (None, "model")),
+    ("*moe/shared/down", ("model", None)),
+    # RWKV6
+    ("*tm/wr", (None, "model")),
+    ("*tm/wk", (None, "model")),
+    ("*tm/wv", (None, "model")),
+    ("*tm/wg", (None, "model")),
+    ("*tm/wo", ("model", None)),
+    ("*tm/cm_k", (None, "model")),
+    ("*tm/cm_v", ("model", None)),
+    ("*tm/cm_r", (None, "model")),
+    # RWKV LoRAs replicate: sharding mix_lora_b's fused (5·M) output dim
+    # crosses the stream boundary at the (B,S,5,M) reshape, forcing 2.7 GB
+    # f32 all-gathers per layer (fwd + remat'd bwd) — §Perf follow-up
+    ("*tm/mix_lora_a", (None, None)),
+    ("*tm/mix_lora_b", (None, None)),
+    ("*tm/decay_lora_a", (None, None)),
+    ("*tm/decay_lora_b", (None, None)),
+    # Mamba2
+    ("*mamba/in_proj", (None, "model")),
+    ("*mamba/out_proj", ("model", None)),
+    ("*mamba/conv_w", (None, "model")),
+    ("*mamba/conv_b", ("model",)),
+    # whisper dec blocks
+    ("*self_attn/wq", (None, "model")),
+    ("*self_attn/wk", (None, "model")),
+    ("*self_attn/wv", (None, "model")),
+    ("*self_attn/wo", ("model", None)),
+    ("*cross_attn/wq", (None, "model")),
+    ("*cross_attn/wk", (None, "model")),
+    ("*cross_attn/wv", (None, "model")),
+    ("*cross_attn/wo", ("model", None)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _resolve(spec_logical: Tuple, mapping: Dict[str, AxisVal], shape, mesh: Mesh):
+    """Logical spec -> PartitionSpec, dropping non-divisible axes.
+
+    Leading stacked-layer dims (len(shape) > len(spec)) are left unsharded:
+    the rule spec aligns to the TRAILING dims of the array.
+    """
+    pad = len(shape) - len(spec_logical)
+    out = [None] * pad
+    for dim, logical in zip(range(pad, len(shape)), spec_logical):
+        if logical is None:
+            out.append(None)
+            continue
+        axes = mapping.get(logical)
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        size = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+        if shape[dim] % size == 0:
+            out.append(axes)
+        else:
+            out.append(None)  # replicate: dim not divisible
+    return P(*out)
+
+
+def param_shardings(
+    params_abstract: PyTree,
+    mesh: Mesh,
+    mapping: Dict[str, AxisVal],
+    mode: str = "tp",
+) -> PyTree:
+    """NamedSharding pytree matching ``params_abstract``.
+
+    mode="tp" (baseline): tensor-parallel over `model`, replicated over the
+    data axes (grads all-reduce across data).
+    mode="fsdp": additionally shards each large parameter's first free dim
+    over `data` (ZeRO-3-style; params all-gather at use, grads
+    reduce-scatter) — a §Perf lever for collective-bound training.
+    """
+    data_axis = mapping.get("data_only", "data")
+    data_size = mesh.shape.get(data_axis, 1) if not isinstance(data_axis, tuple) else 1
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_abstract)
+    out = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        spec = P()
+        for pattern, logical in PARAM_RULES:
+            if fnmatch.fnmatch(key, pattern):
+                spec = _resolve(logical, mapping, leaf.shape, mesh)
+                break
+        if mode == "fsdp" and int(np.prod(leaf.shape)) >= 1_000_000:
+            parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            for d in range(len(leaf.shape)):
+                if parts[d] is None and leaf.shape[d] % data_size == 0:
+                    parts[d] = data_axis
+                    break
+            spec = P(*parts)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(
+    batch_abstract: Dict, mesh: Mesh, mapping: Dict[str, AxisVal]
+) -> Dict:
+    """Batch inputs: leading batch dim over the (pod×)data axes, except
+    positions_3d whose batch dim is axis 1."""
+    out = {}
+    for k, v in batch_abstract.items():
+        if k == "positions_3d":
+            logical = (None, "batch") + (None,) * (len(v.shape) - 2)
+        else:
+            logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, _resolve(logical, mapping, v.shape, mesh))
+    return out
+
+
+# Cache sharding rules keyed by cache-dict field name.  Baseline ("seq"):
+# KV caches shard the slot (sequence) dim over `model` — sequence-parallel
+# decode — and batch over data; recurrent states shard heads over `model`.
+# "heads" mode shards kv-heads over `model` instead (replicates when the
+# head count is not divisible); "batch" shards only the batch dim.
+CACHE_RULES: Dict[str, Tuple] = {
+    "k": (None, "batch", "model", None, None),
+    "v": (None, "batch", "model", None, None),
+    "k_s": (None, "batch", "model", None),
+    "v_s": (None, "batch", "model", None),
+    "c": (None, "batch", "model", None),
+    "kr": (None, "batch", "model", None),
+    "xk": (None, "batch", None, None, None),
+    "xv": (None, "batch", None, None, None),
+    "state": (None, "batch", "model", None, None),
+    "tm_x": (None, "batch", None),
+    "cm_x": (None, "batch", None),
+    "ssm": (None, None, "batch", "model", None, None),
+    "conv": (None, None, "batch", None, "model"),
+    "shared_k": (None, "batch", "model", None, None),
+    "shared_v": (None, "batch", "model", None, None),
+}
+
+CACHE_RULES_HEADS: Dict[str, Tuple] = {
+    **CACHE_RULES,
+    "k": (None, "batch", None, "model", None),
+    "v": (None, "batch", None, "model", None),
+    "shared_k": (None, "batch", None, "model", None),
+    "shared_v": (None, "batch", None, "model", None),
+    "c": (None, "batch", None, "model"),  # latent dim over model
+    "kr": (None, "batch", None, None),
+}
+
+CACHE_RULES_BATCH: Dict[str, Tuple] = {
+    k: tuple(a if a == "batch" else None for a in v) for k, v in CACHE_RULES.items()
+}
+
+CACHE_RULES_HEADDIM: Dict[str, Tuple] = {
+    **CACHE_RULES,
+    # head_dim over model: the decode DUS update is then local on every
+    # shard (slot-sharded caches make the one-slot write cross-shard),
+    # at the cost of an all-reduce of the per-step attention logits
+    "k": (None, "batch", None, None, "model"),
+    "v": (None, "batch", None, None, "model"),
+    "shared_k": (None, "batch", None, None, "model"),
+    "shared_v": (None, "batch", None, None, "model"),
+    "c": (None, "batch", None, "model"),
+    "kr": (None, "batch", None, None),
+}
+
+CACHE_MODES = {
+    "seq": CACHE_RULES,
+    "heads": CACHE_RULES_HEADS,
+    "batch": CACHE_RULES_BATCH,
+    "headdim": CACHE_RULES_HEADDIM,
+}
+
+
+def cache_shardings(
+    cache_abstract: Dict, mesh: Mesh, mapping: Dict[str, AxisVal], mode: str = "seq"
+) -> Dict:
+    rules = CACHE_MODES[mode]
+    out = {}
+    for k, v in cache_abstract.items():
+        logical = rules[k]
+        out[k] = NamedSharding(mesh, _resolve(logical, mapping, v.shape, mesh))
+    return out
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

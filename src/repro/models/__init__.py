@@ -1,0 +1,2 @@
+"""Model definitions: the weak/strong detectors of the repro, and the
+transformer/SSM/MoE layer zoo used by the assigned architectures."""

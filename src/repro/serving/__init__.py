@@ -1,0 +1,2 @@
+"""Serving substrate: KV-cache decode loop and ORIC-gated cascade serving
+(the paper's offloading pipeline applied to LM early-exit cascades)."""

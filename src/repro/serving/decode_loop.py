@@ -1,0 +1,47 @@
+"""Batched autoregressive decode loop over ``decode_step``."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LMConfig, decode_step, prefill
+
+
+def generate(
+    params,
+    cfg: LMConfig,
+    batch: Dict,
+    steps: int,
+    capacity: Optional[int] = None,
+    greedy: bool = True,
+    key=None,
+) -> jnp.ndarray:
+    """Prefill + ``steps`` greedy/sampled tokens.  Returns (B, steps)."""
+    B, S = batch["tokens"].shape
+    capacity = capacity or (S + steps)
+    logits, cache = prefill(params, cfg, batch, capacity=capacity)
+
+    step_fn = jax.jit(functools.partial(decode_step, cfg=cfg))
+
+    def pick(lg, k):
+        if greedy:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = []
+    tok = pick(logits, key)
+    for t in range(steps):
+        toks.append(tok)
+        if t == steps - 1:
+            break
+        key, sub = jax.random.split(key)
+        logits, cache = step_fn(
+            params=params, cache=cache, tokens=tok,
+            pos=jnp.asarray(S + t, jnp.int32),
+        )
+        tok = pick(logits, sub)
+    return jnp.stack(toks, axis=1)

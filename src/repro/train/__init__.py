@@ -1,0 +1,14 @@
+"""Training substrate: hand-written AdamW, LR schedules, checkpointing."""
+from repro.train.adamw import AdamWState, adamw_init, adamw_update
+from repro.train.schedule import constant_schedule, warmup_cosine
+from repro.train.checkpoint import load_pytree, save_pytree
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "constant_schedule",
+    "warmup_cosine",
+    "load_pytree",
+    "save_pytree",
+]

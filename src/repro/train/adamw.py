@@ -1,0 +1,53 @@
+"""AdamW implemented directly on pytrees (no optax dependency)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.zeros_like, params))
+
+
+def adamw_update(
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    lr: jnp.ndarray | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float | None = 1.0,
+) -> Tuple[PyTree, AdamWState]:
+    """One AdamW step; returns (new_params, new_state)."""
+    if grad_clip is not None:
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves) + 1e-12)
+        scale = jnp.minimum(1.0, grad_clip / gnorm)
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,38 @@
+"""Pytree checkpointing to .npz (flat key-path encoding, no pickle)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "||"
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat, _ = _flatten(tree)
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Load a checkpoint into the structure of ``like``."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(str(x) for x in p)
+        arr = data[key]
+        leaves.append(arr.astype(np.asarray(leaf).dtype).reshape(np.shape(leaf)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

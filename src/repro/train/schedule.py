@@ -1,0 +1,24 @@
+"""LR schedules as step -> lr callables (jit-safe)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(
+    peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

@@ -1,0 +1,67 @@
+"""Detector training loop (weak & strong models of the repro)."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.shapes import ShapesDataset
+from repro.models.detector import (
+    DetectorConfig,
+    build_targets,
+    detector_init,
+    detector_loss,
+)
+from repro.train.adamw import adamw_init, adamw_update
+from repro.train.schedule import warmup_cosine
+
+
+def train_detector(
+    cfg: DetectorConfig,
+    dataset: ShapesDataset,
+    steps: int = 600,
+    batch_size: int = 64,
+    peak_lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 100,
+) -> Tuple[dict, List[float]]:
+    """Returns (params, loss trace)."""
+    key = jax.random.PRNGKey(seed)
+    params = detector_init(key, cfg)
+    opt_state = adamw_init(params)
+    sched = warmup_cosine(peak_lr, max(steps // 10, 1), steps)
+
+    @functools.partial(jax.jit, static_argnames=("cfg",))
+    def step_fn(params, opt_state, images, obj_t, cls_t, box_t, lr, *, cfg):
+        loss, grads = jax.value_and_grad(detector_loss)(
+            params, cfg, images, obj_t, cls_t, box_t
+        )
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr, weight_decay=1e-4
+        )
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(seed + 1)
+    losses: List[float] = []
+    it = 0
+    t0 = time.time()
+    while it < steps:
+        for imgs, boxes, classes in dataset.batches(batch_size, rng):
+            obj_t, cls_t, box_t = build_targets(cfg, boxes, classes)
+            params, opt_state, loss = step_fn(
+                params, opt_state,
+                jnp.asarray(imgs), jnp.asarray(obj_t), jnp.asarray(cls_t),
+                jnp.asarray(box_t), sched(it), cfg=cfg,
+            )
+            losses.append(float(loss))
+            it += 1
+            if log_every and it % log_every == 0:
+                rate = it / (time.time() - t0)
+                print(f"  [{cfg.name}] step {it}/{steps} loss {float(loss):.4f} ({rate:.1f} it/s)")
+            if it >= steps:
+                break
+    return params, losses

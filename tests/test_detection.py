@@ -1,0 +1,140 @@
+"""Detection substrate: box ops, mAP engine, incremental evaluation, NMS,
+TIDE decomposition."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.detection import (
+    Detections,
+    GroundTruth,
+    box_iou,
+    box_iou_np,
+    dataset_map,
+    nms,
+    tide_errors,
+)
+from repro.detection.map_engine import APAccumulator, average_precision, match_detections
+
+
+def test_iou_known_values():
+    a = jnp.array([[0.0, 0, 10, 10]])
+    b = jnp.array([[0.0, 0, 10, 10], [5, 5, 15, 15], [20, 20, 30, 30]])
+    iou = np.asarray(box_iou(a, b))[0]
+    assert iou[0] == pytest.approx(1.0)
+    assert iou[1] == pytest.approx(25 / 175)
+    assert iou[2] == pytest.approx(0.0)
+
+
+def test_iou_np_matches_jnp(rng):
+    a = rng.uniform(0, 50, (40, 2))
+    a = np.concatenate([a, a + rng.uniform(1, 20, (40, 2))], 1)
+    b = rng.uniform(0, 50, (30, 2))
+    b = np.concatenate([b, b + rng.uniform(1, 20, (30, 2))], 1)
+    np.testing.assert_allclose(
+        box_iou_np(a, b), np.asarray(box_iou(jnp.asarray(a), jnp.asarray(b))),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_perfect_detector_map_is_one(noisy_pair):
+    gts, _, _ = noisy_pair
+    perfect = [Detections(g.boxes, np.ones(len(g)), g.classes) for g in gts]
+    assert dataset_map(perfect, gts) == pytest.approx(1.0)
+
+
+def test_empty_detector_map_is_zero(noisy_pair):
+    gts, _, _ = noisy_pair
+    empty = [Detections(np.zeros((0, 4)), np.zeros(0), np.zeros(0, int)) for _ in gts]
+    assert dataset_map(empty, gts) == 0.0
+
+
+def test_strong_beats_weak(noisy_pair):
+    gts, weak, strong = noisy_pair
+    assert dataset_map(strong, gts) > dataset_map(weak, gts)
+
+
+def test_incremental_equals_batch(noisy_pair):
+    """APAccumulator.map_with_image must be EXACT vs full recomputation."""
+    gts, weak, _ = noisy_pair
+    acc = APAccumulator((0.5,))
+    for d, g in zip(weak[:-1], gts[:-1]):
+        acc.add(match_detections(d, g, (0.5,)))
+    ev = match_detections(weak[-1], gts[-1], (0.5,))
+    assert acc.map_with_image(ev) == pytest.approx(dataset_map(weak, gts), abs=1e-12)
+
+
+def test_map_with_image_does_not_mutate(noisy_pair):
+    gts, weak, strong = noisy_pair
+    acc = APAccumulator((0.5,))
+    for d, g in zip(weak[:20], gts[:20]):
+        acc.add(match_detections(d, g, (0.5,)))
+    base = acc.map()
+    acc.map_with_image(match_detections(strong[25], gts[25], (0.5,)))
+    assert acc.map() == base
+
+
+def test_hallucination_only_visible_with_context(noisy_pair):
+    """The paper's motivating case: a background error on a class absent
+    from the image is invisible to per-image mAP but hurts context mAP."""
+    gts, weak, _ = noisy_pair
+    acc = APAccumulator((0.5,))
+    for d, g in zip(weak[:30], gts[:30]):
+        acc.add(match_detections(d, g, (0.5,)))
+    gt = GroundTruth(np.array([[0.0, 0, 10, 10]]), np.array([0]))
+    clean = Detections(np.array([[0.0, 0, 10, 10]]), np.array([0.9]), np.array([0]))
+    halluc = Detections(
+        np.array([[0.0, 0, 10, 10], [30, 30, 40, 40]]),
+        np.array([0.9, 0.95]),
+        np.array([0, 7]),
+    )
+    ev_c = match_detections(clean, gt, (0.5,))
+    ev_h = match_detections(halluc, gt, (0.5,))
+    # per-image (empty context): identical
+    empty = APAccumulator((0.5,))
+    assert empty.map_with_image(ev_h) == empty.map_with_image(ev_c)
+    # with context: hallucination strictly worse
+    assert acc.map_with_image(ev_h) < acc.map_with_image(ev_c)
+
+
+def test_average_precision_edges():
+    assert np.isnan(average_precision(np.array([0.9]), np.array([True]), 0))
+    assert average_precision(np.zeros(0), np.zeros(0, bool), 3) == 0.0
+    ap_all_tp = average_precision(np.array([0.9, 0.8]), np.array([True, True]), 2)
+    assert ap_all_tp == pytest.approx(1.0)
+    ap_with_fp = average_precision(
+        np.array([0.95, 0.9, 0.8]), np.array([False, True, True]), 2
+    )
+    assert ap_with_fp < 1.0
+
+
+def test_nms_suppresses_same_class_only():
+    boxes = jnp.array([[0.0, 0, 10, 10], [1, 1, 11, 11], [0, 0, 10, 10]])
+    scores = jnp.array([0.9, 0.8, 0.7])
+    classes = jnp.array([0, 0, 1])
+    keep = np.asarray(nms(boxes, scores, classes, iou_threshold=0.5))
+    assert keep.tolist() == [True, False, True]
+
+
+def test_tide_on_perfect_is_zero(noisy_pair):
+    gts, _, _ = noisy_pair
+    perfect = [Detections(g.boxes, np.ones(len(g)), g.classes) for g in gts]
+    errs = tide_errors(perfect, gts)
+    for cat in ("cls", "loc", "cls_loc", "dupe", "bkg", "miss"):
+        assert errs[cat] == 0.0
+        assert errs[f"{cat}_count"] == 0
+
+
+def test_tide_counts_specific_errors():
+    gt = GroundTruth(np.array([[0.0, 0, 10, 10], [30.0, 30, 40, 40]]), np.array([0, 1]))
+    det = Detections(
+        np.array([
+            [0.0, 0, 10, 10],   # cls error (wrong label, IoU 1)
+            [50.0, 50, 60, 60],  # background
+        ]),
+        np.array([0.9, 0.8]),
+        np.array([3, 2]),
+    )
+    errs = tide_errors([det], [gt])
+    assert errs["cls_count"] == 1
+    assert errs["bkg_count"] == 1
+    assert errs["miss_count"] >= 1  # the un-covered GT at (30,30)

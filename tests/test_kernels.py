@@ -1,0 +1,163 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.estimator_mlp import estimator_mlp, estimator_mlp_ref
+from repro.kernels.iou_matrix import iou_matrix, iou_matrix_ref
+from repro.kernels.wkv6 import wkv6, wkv6_ref
+
+
+def boxes(rng, n, dtype):
+    b = rng.uniform(0, 50, (n, 2))
+    return jnp.asarray(np.concatenate([b, b + rng.uniform(1, 20, (n, 2))], 1), dtype)
+
+
+@pytest.mark.parametrize("n,m", [(1, 1), (7, 300), (256, 256), (511, 130), (1024, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_iou_matrix_sweep(n, m, dtype, rng):
+    a, b = boxes(rng, n, dtype), boxes(rng, m, dtype)
+    got = iou_matrix(a, b)
+    want = iou_matrix_ref(a, b)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("tile", [128, 256])
+def test_iou_matrix_tiles(tile, rng):
+    a, b = boxes(rng, 300, jnp.float32), boxes(rng, 200, jnp.float32)
+    got = iou_matrix(a, b, tile_n=tile, tile_m=tile)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(iou_matrix_ref(a, b)), atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("B,F,H", [(1, 10, 8), (37, 395, 96), (128, 512, 128), (300, 100, 64)])
+def test_estimator_mlp_sweep(B, F, H, rng):
+    x = jnp.asarray(rng.normal(0, 1, (B, F)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(0, 0.1, (F, H)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(0, 0.1, H), jnp.float32)
+    w2 = jnp.asarray(rng.normal(0, 0.1, H), jnp.float32)
+    b2 = jnp.asarray(0.05, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(estimator_mlp(x, w1, b1, w2, b2)),
+        np.asarray(estimator_mlp_ref(x, w1, b1, w2, b2)),
+        atol=1e-5,
+    )
+
+
+def test_estimator_mlp_matches_trained_estimator(rng):
+    """The kernel must agree with a RewardEstimator restricted to one
+    hidden layer (the deployable on-device path)."""
+    from repro.core.estimator import EstimatorConfig, RewardEstimator
+
+    x = rng.normal(0, 1, (64, 50)).astype(np.float32)
+    y = (x[:, 0] > 0).astype(np.float32)
+    est = RewardEstimator(50, EstimatorConfig(hidden=(32,), epochs=5, standardize=False))
+    est.fit(x, y)
+    p = est.params
+    got = estimator_mlp(
+        jnp.asarray(x), p["layer0"]["w"], p["layer0"]["b"],
+        p["layer1"]["w"][:, 0], p["layer1"]["b"][0],
+    )
+    np.testing.assert_allclose(np.asarray(got), est.predict(x), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,T,H,K,V", [(1, 8, 1, 8, 8), (2, 64, 3, 16, 16), (2, 33, 2, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(B, T, H, K, V, dtype, rng):
+    r = jnp.asarray(rng.normal(0, 1, (B, T, H, K)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, T, H, K)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, T, H, V)), dtype)
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (B, T, H, K)), dtype)
+    u = jnp.asarray(rng.normal(0, 0.2, (H, K)), dtype)
+    s0 = jnp.asarray(rng.normal(0, 0.1, (B, H, K, V)), dtype)
+    out, sT = wkv6(r, k, v, w, u, s0)
+
+    def fold(x):
+        return jnp.moveaxis(jnp.asarray(x, jnp.float32), 1, 2).reshape(B * H, T, x.shape[-1])
+
+    u_b = jnp.broadcast_to(jnp.asarray(u, jnp.float32)[None], (B, H, K)).reshape(B * H, K, 1)
+    oref, sref = wkv6_ref(fold(r), fold(k), fold(v), fold(w), u_b,
+                          jnp.asarray(s0, jnp.float32).reshape(B * H, K, V))
+    oref = jnp.moveaxis(oref.reshape(B, H, T, V), 1, 2)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref), atol=tol, rtol=tol)
+    np.testing.assert_allclose(
+        np.asarray(sT).reshape(-1), np.asarray(sref).reshape(-1), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize(
+    "B,S,T,H,K,D,window,off",
+    [
+        (1, 128, 128, 2, 1, 32, 0, 0),
+        (2, 256, 256, 4, 2, 64, 0, 0),
+        (1, 100, 300, 4, 4, 32, 0, 200),  # unpadded sizes + query offset
+        (2, 256, 256, 4, 2, 64, 64, 0),  # sliding window
+        (1, 64, 512, 8, 2, 128, 128, 448),  # windowed decode-tail
+    ],
+)
+def test_flash_sdpa_sweep(B, S, T, H, K, D, window, off, rng):
+    from repro.kernels.flash_sdpa import flash_sdpa, flash_sdpa_ref
+
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, T, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, T, K, D)), jnp.float32)
+    got = flash_sdpa(q, k, v, tq=64, tk=64, window=window, q_offset=off)
+    G = H // K
+    qf = jnp.moveaxis(q, 1, 2).reshape(B * H, S, D)
+    kf = jnp.repeat(jnp.moveaxis(k, 1, 2), G, axis=1).reshape(B * H, T, D)
+    vf = jnp.repeat(jnp.moveaxis(v, 1, 2), G, axis=1).reshape(B * H, T, D)
+    want = flash_sdpa_ref(qf, kf, vf, window=window, q_offset=off)
+    want = jnp.moveaxis(want.reshape(B, H, S, D), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+def test_flash_sdpa_matches_model_sdpa(rng):
+    from repro.kernels.flash_sdpa import flash_sdpa
+    from repro.models.layers import _sdpa, causal_mask
+
+    q = jnp.asarray(rng.normal(0, 1, (2, 128, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (2, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (2, 128, 2, 64)), jnp.float32)
+    want = _sdpa(q, k, v, causal_mask(128, 128, 0), 2, 4).reshape(2, 128, 4, 64)
+    got = flash_sdpa(q, k, v, tq=64, tk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+def test_wkv6_matches_model_layer(rng):
+    """Kernel semantics == the RWKV6 time-mix inner scan in the model."""
+    from repro.models.layers import RWKV6Config, rwkv6_init, rwkv6_time_mix
+
+    cfg = RWKV6Config(d_model=64, head_size=16)
+    params = rwkv6_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    x = jnp.asarray(rng.normal(0, 1, (B, S, 64)), jnp.float32)
+    out_model, state_model, _ = rwkv6_time_mix(params, cfg, x)
+    # recompute r/k/v/w/u exactly as the layer does, then run the kernel
+    from repro.models.layers import _rwkv6_mix
+
+    x_prev = jnp.concatenate([jnp.zeros((B, 1, 64)), x[:, :-1]], axis=1)
+    mixed = _rwkv6_mix(params, x, x_prev)
+    xr, xk, xv, xg, xw = [mixed[:, :, i] for i in range(5)]
+    H, Hd = cfg.num_heads, cfg.head_size
+    r = (xr @ params["wr"]).reshape(B, S, H, Hd)
+    k = (xk @ params["wk"]).reshape(B, S, H, Hd)
+    v = (xv @ params["wv"]).reshape(B, S, H, Hd)
+    dl = jnp.tanh(xw @ params["decay_lora_a"]) @ params["decay_lora_b"]
+    w = jnp.exp(-jnp.exp(params["decay_base"] + dl)).reshape(B, S, H, Hd)
+    s0 = jnp.zeros((B, H, Hd, Hd), jnp.float32)
+    out_k, _ = wkv6(r, k, v, w, params["bonus"], s0)
+    # compare pre-norm wkv outputs by applying the same output transform
+    from repro.models.layers import layernorm
+
+    g = jax.nn.silu(xg @ params["wg"])
+    out_ref = layernorm(params["ln_x"], out_k.reshape(B, S, 64).astype(x.dtype)) * g
+    out_ref = out_ref @ params["wo"]
+    np.testing.assert_allclose(
+        np.asarray(out_ref), np.asarray(out_model), atol=1e-4
+    )

@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reward import CdfTransform, topk_offload_mask
+from repro.detection.boxes import box_iou_np
+from repro.detection.map_engine import (
+    Detections,
+    GroundTruth,
+    average_precision,
+    dataset_map,
+)
+
+finite = st.floats(min_value=0.0, max_value=100.0, allow_nan=False)
+
+
+@st.composite
+def box_arrays(draw, max_n=12):
+    n = draw(st.integers(1, max_n))
+    xy = draw(
+        st.lists(st.tuples(finite, finite, finite, finite), min_size=n, max_size=n)
+    )
+    arr = np.array(xy)
+    x1 = np.minimum(arr[:, 0], arr[:, 2])
+    x2 = np.maximum(arr[:, 0], arr[:, 2]) + 0.1
+    y1 = np.minimum(arr[:, 1], arr[:, 3])
+    y2 = np.maximum(arr[:, 1], arr[:, 3]) + 0.1
+    return np.stack([x1, y1, x2, y2], axis=1)
+
+
+@given(box_arrays(), box_arrays())
+@settings(max_examples=50, deadline=None)
+def test_iou_bounds_and_symmetry(a, b):
+    iou = box_iou_np(a, b)
+    assert np.all(iou >= 0) and np.all(iou <= 1 + 1e-9)
+    np.testing.assert_allclose(iou, box_iou_np(b, a).T, atol=1e-12)
+
+
+@given(box_arrays())
+@settings(max_examples=30, deadline=None)
+def test_iou_self_diagonal_is_one(a):
+    iou = box_iou_np(a, a)
+    np.testing.assert_allclose(np.diag(iou), 1.0, atol=1e-9)
+
+
+@given(
+    st.lists(st.floats(0.01, 1.0, allow_nan=False), min_size=1, max_size=30),
+    st.data(),
+)
+@settings(max_examples=50, deadline=None)
+def test_ap_false_positive_never_helps(scores, data):
+    """Appending a false positive must not increase AP."""
+    n = len(scores)
+    tp = np.array(data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    n_gt = max(int(tp.sum()), 1)
+    s = np.array(scores)
+    base = average_precision(s, tp, n_gt)
+    fp_score = data.draw(st.floats(0.01, 1.0, allow_nan=False))
+    worse = average_precision(
+        np.append(s, fp_score), np.append(tp, False), n_gt
+    )
+    assert worse <= base + 1e-12
+
+
+@given(st.lists(st.floats(-5, 5, allow_nan=False), min_size=2, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_cdf_transform_properties(rewards):
+    r = np.array(rewards)
+    cdf = CdfTransform(r)
+    y = cdf(r)
+    assert np.all(y >= 0) and np.all(y <= 1)
+    order = np.argsort(r, kind="stable")
+    assert np.all(np.diff(y[order]) >= -1e-12)  # monotone in reward
+
+
+@given(
+    st.integers(1, 300),
+    st.floats(0.0, 1.0, allow_nan=False),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_topk_mask_exact_budget(n, ratio, seed):
+    scores = np.random.default_rng(seed).uniform(size=n)
+    mask = topk_offload_mask(scores, ratio)
+    assert mask.sum() == round(ratio * n)
+    if 0 < mask.sum() < n:
+        # every offloaded score >= every kept score
+        assert scores[mask].min() >= scores[~mask].max() - 1e-12
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_map_permutation_invariance(seed, n_img):
+    """Dataset mAP must not depend on image order."""
+    rng = np.random.default_rng(seed)
+    gts, dets = [], []
+    for _ in range(n_img):
+        m = int(rng.integers(1, 4))
+        b = rng.uniform(0, 40, (m, 2))
+        boxes = np.concatenate([b, b + rng.uniform(2, 10, (m, 2))], 1)
+        cls = rng.integers(0, 4, m)
+        gts.append(GroundTruth(boxes, cls))
+        keep = rng.uniform(size=m) > 0.3
+        dets.append(
+            Detections(
+                boxes[keep] + rng.normal(0, 1, (int(keep.sum()), 4)),
+                rng.uniform(0.2, 1.0, int(keep.sum())),
+                cls[keep],
+            )
+        )
+    base = dataset_map(dets, gts)
+    perm = rng.permutation(n_img)
+    shuffled = dataset_map([dets[i] for i in perm], [gts[i] for i in perm])
+    np.testing.assert_allclose(base, shuffled, atol=1e-12)

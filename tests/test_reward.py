@@ -1,0 +1,125 @@
+"""ORIC/ORI reward metrics, MORIC transform, policies, baselines."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveFeedingSVM,
+    CdfTransform,
+    RewardOracle,
+    ThresholdPolicy,
+    TokenBucket,
+    cascade_map,
+    dcsb_signals,
+    fit_dcsb,
+    match_pairs,
+    ori_batch,
+    random_offload_mask,
+    topk_offload_mask,
+)
+from repro.detection.map_engine import match_detections
+
+
+@pytest.fixture(scope="module")
+def matched(noisy_pair):
+    gts, weak, strong = noisy_pair
+    return match_pairs(weak, strong, gts)
+
+
+@pytest.fixture(scope="module")
+def oracle(noisy_pair, matched):
+    gts, weak, _ = noisy_pair
+    pool = [match_detections(d, g, (0.5,)) for d, g in zip(weak[:30], gts[:30])]
+    return RewardOracle.from_pool(pool, 25, np.random.default_rng(0))
+
+
+def test_oric_with_empty_context_equals_ori(matched):
+    """Eq. 5 degenerates to ORI when E = ∅ (scale (|E|+1) = 1)."""
+    empty_oracle = RewardOracle([], (0.5,))
+    oric0 = empty_oracle.oric_batch(matched[:20])
+    ori = ori_batch(matched[:20])
+    np.testing.assert_allclose(oric0, ori, atol=1e-12)
+
+
+def test_oracle_cascade_between_weak_and_strong(matched, oracle):
+    n = len(matched)
+    rewards = oracle.oric_batch(matched)
+    weak_map = cascade_map(matched, np.zeros(n, bool))
+    strong_map = cascade_map(matched, np.ones(n, bool))
+    cas = cascade_map(matched, topk_offload_mask(rewards, 0.3))
+    assert weak_map < cas  # offloading the top-reward images helps
+
+
+def test_oracle_beats_random(matched, oracle):
+    rng = np.random.default_rng(1)
+    rewards = oracle.oric_batch(matched)
+    r = 0.3
+    cas = cascade_map(matched, topk_offload_mask(rewards, r))
+    rand = np.mean([
+        cascade_map(matched, random_offload_mask(len(matched), r, rng))
+        for _ in range(5)
+    ])
+    assert cas > rand
+
+
+def test_full_offload_equals_strong(matched):
+    strong_map = cascade_map(matched, np.ones(len(matched), bool))
+    mask = topk_offload_mask(np.zeros(len(matched)), 1.0)
+    assert cascade_map(matched, mask) == pytest.approx(strong_map)
+
+
+def test_cdf_transform_uniformises():
+    r = np.random.default_rng(0).normal(0, 3, 500)
+    cdf = CdfTransform(r)
+    y = cdf(r)
+    assert y.min() >= 0 and y.max() <= 1.0
+    # ranks of a continuous sample are ~uniform
+    hist, _ = np.histogram(y, bins=5, range=(0, 1))
+    assert hist.std() / hist.mean() < 0.2
+    # monotone
+    order = np.argsort(r)
+    assert np.all(np.diff(y[order]) >= 0)
+
+
+def test_topk_mask_count():
+    scores = np.random.default_rng(0).uniform(size=100)
+    for r in (0.0, 0.1, 0.35, 1.0):
+        assert topk_offload_mask(scores, r).sum() == round(100 * r)
+
+
+def test_threshold_policy_runtime_ratio():
+    cal = np.random.default_rng(0).uniform(size=1000)
+    pol = ThresholdPolicy(cal, ratio=0.2)
+    assert abs(pol.decide_batch(cal).mean() - 0.2) < 0.02
+    pol.set_ratio(0.5)  # runtime adjustment (paper Table I)
+    assert abs(pol.decide_batch(cal).mean() - 0.5) < 0.02
+
+
+def test_token_bucket_enforces_rate():
+    rng = np.random.default_rng(0)
+    tb = TokenBucket(rate=0.1, depth=3, base_threshold=0.0)
+    est = rng.uniform(size=2000)
+    decisions = [tb.decide(float(e)) for e in est]
+    ratio = np.mean(decisions)
+    assert ratio <= 0.1 + 3 / 2000 + 1e-9  # rate + initial burst
+
+
+def test_adaptive_feeding_ratio_grows_with_cplus(matched, noisy_pair):
+    gts, weak, _ = noisy_pair
+    from repro.core import extract_features_batch
+
+    x = extract_features_batch(weak, 8, image_size=64.0)
+    difficult = ori_batch(matched) > 0
+    ratios = []
+    for cp in (0.25, 4.0):
+        svm = AdaptiveFeedingSVM(c_plus=cp, epochs=40).fit(x, difficult)
+        ratios.append(svm.predict(x).mean())
+    assert ratios[0] <= ratios[1]
+
+
+def test_dcsb_signals_and_rule(noisy_pair):
+    gts, weak, strong = noisy_pair
+    counts, areas = dcsb_signals(weak)
+    assert counts.shape == (len(weak),) and areas.shape == (len(weak),)
+    rule = fit_dcsb(weak, strong)
+    pred = rule.predict_signals(counts, areas)
+    assert pred.dtype == bool and pred.shape == (len(weak),)

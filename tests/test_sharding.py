@@ -1,0 +1,94 @@
+"""Sharding rules + mesh context (1-device CPU view; the 512-device mesh
+is exercised by the dryrun CLI, not here)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.meshctx import bind_mesh, constrain
+from repro.launch.sharding import (
+    CACHE_RULES,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)
+from repro.models.lm import abstract_params, init_cache, reduced
+
+
+@pytest.fixture
+def mesh1():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+MAPPING = {"batch": "data", "model": "model", "expert": "model"}
+
+
+def test_constrain_is_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = constrain(x, "batch", None)
+    assert y is x
+
+
+def test_constrain_applies_under_mesh(mesh1):
+    x = jnp.ones((4, 4))
+    with bind_mesh(mesh1, MAPPING):
+        y = jax.jit(lambda a: constrain(a, "batch", None))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "deepseek_moe_16b", "rwkv6_1b6", "zamba2_2b7", "whisper_base"])
+def test_param_rules_cover_big_leaves(arch, mesh1):
+    """Every >1M-element parameter must hit a sharding rule (not end up
+    replicated by fallthrough) — guards against rule-table rot."""
+    cfg = get_config(arch)
+    params = abstract_params(cfg)
+    sh = param_shardings(params, mesh1, MAPPING)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree.leaves(sh)
+    uncovered = []
+    for (path, leaf), s in zip(flat_p, flat_s):
+        n = int(np.prod(leaf.shape))
+        if n >= 1_000_000 and s.spec == P():
+            uncovered.append("/".join(str(p) for p in path))
+    assert not uncovered, uncovered
+
+
+def test_divisibility_fallback(mesh1):
+    """A dim not divisible by the mesh axis must replicate, not fail."""
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    # pretend a model axis of size 16 via resolver arithmetic on mesh1 (size
+    # 1 divides everything), so instead test _resolve directly:
+    from repro.launch.sharding import _resolve
+
+    class FakeMesh:
+        shape = {"data": 1, "model": 16}
+
+    spec = _resolve((None, "model"), MAPPING, (10, 24), FakeMesh())
+    assert spec == P(None, None)  # 24 % 16 != 0 -> replicated
+    spec2 = _resolve((None, "model"), MAPPING, (10, 32), FakeMesh())
+    assert spec2 == P(None, "model")
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "deepseek_v2_lite_16b", "rwkv6_1b6", "zamba2_2b7", "whisper_base"])
+def test_cache_rules_cover_all_fields(arch, mesh1):
+    cfg = reduced(get_config(arch))
+    cache = init_cache(cfg, batch=2, capacity=16, abstract=True)
+    for k in cache:
+        assert k in CACHE_RULES, k
+    sh = cache_shardings(cache, mesh1, MAPPING)
+    assert set(sh) == set(cache)
+
+
+def test_batch_shardings_positions_3d(mesh1):
+    import jax as _jax
+
+    specs = {
+        "tokens": _jax.ShapeDtypeStruct((8, 16), jnp.int32),
+        "positions_3d": _jax.ShapeDtypeStruct((3, 8, 16), jnp.int32),
+    }
+    sh = batch_shardings(specs, mesh1, MAPPING)
+    assert sh["tokens"].spec[0] == "data"
+    assert sh["positions_3d"].spec == P(None, "data", None)

@@ -1,0 +1,105 @@
+"""End-to-end behaviour: the paper's full offloading pipeline on a tiny
+scale (trained detectors -> ORIC -> estimator -> policy), and the LM
+early-exit cascade transfer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CdfTransform,
+    EstimatorConfig,
+    RewardEstimator,
+    RewardOracle,
+    ThresholdPolicy,
+    cascade_map,
+    extract_features_batch,
+    match_pairs,
+    topk_offload_mask,
+)
+from repro.detection.map_engine import dataset_map, match_detections
+
+
+@pytest.fixture(scope="module")
+def tiny_pipeline():
+    """Train tiny weak/strong detectors and produce matched val results."""
+    from repro.data.shapes import ShapesDataset
+    from repro.models.detector import STRONG, WEAK, decode_detections
+    from repro.train.trainer import train_detector
+
+    train = ShapesDataset.generate(256, seed=0)
+    val = ShapesDataset.generate(96, seed=1)
+    pool = ShapesDataset.generate(96, seed=2)
+    pw, _ = train_detector(WEAK, train, steps=80, batch_size=32, log_every=0)
+    ps, _ = train_detector(STRONG, train, steps=160, batch_size=32, log_every=0)
+    weak_val = decode_detections(pw, WEAK, val.images)
+    strong_val = decode_detections(ps, STRONG, val.images)
+    weak_pool = decode_detections(pw, WEAK, pool.images)
+    pairs = match_pairs(weak_val, strong_val, val.gts)
+    pool_evals = [match_detections(d, g, (0.5,)) for d, g in zip(weak_pool, pool.gts)]
+    return {
+        "pairs": pairs,
+        "pool": pool_evals,
+        "weak_val": weak_val,
+        "weak_map": dataset_map(weak_val, val.gts),
+        "strong_map": dataset_map(strong_val, val.gts),
+    }
+
+
+def test_strong_detector_better(tiny_pipeline):
+    assert tiny_pipeline["strong_map"] > tiny_pipeline["weak_map"]
+
+
+def test_oric_oracle_cascade_improves_on_weak(tiny_pipeline):
+    rng = np.random.default_rng(0)
+    oracle = RewardOracle.from_pool(tiny_pipeline["pool"], 64, rng)
+    rewards = oracle.oric_batch(tiny_pipeline["pairs"])
+    cas = cascade_map(tiny_pipeline["pairs"], topk_offload_mask(rewards, 0.3))
+    assert cas > tiny_pipeline["weak_map"]
+
+
+def test_estimated_pipeline_end_to_end(tiny_pipeline):
+    """Features -> MORIC targets -> estimator -> threshold policy, full loop."""
+    rng = np.random.default_rng(0)
+    pairs = tiny_pipeline["pairs"]
+    oracle = RewardOracle.from_pool(tiny_pipeline["pool"], 64, rng)
+    rewards = oracle.oric_batch(pairs)
+    x = extract_features_batch(tiny_pipeline["weak_val"], 8, image_size=64.0)
+    cdf = CdfTransform(rewards)
+    est = RewardEstimator(x.shape[1], EstimatorConfig(epochs=15))
+    est.fit(x, cdf(rewards))
+    preds = est.predict(x)
+    policy = ThresholdPolicy(preds, ratio=0.3)
+    mask = policy.decide_batch(preds)
+    assert 0.15 <= mask.mean() <= 0.45  # policy lands near the target ratio
+    cas = cascade_map(pairs, mask)
+    # estimated cascade should sit between weak-only and strong-only
+    assert cas >= tiny_pipeline["weak_map"] - 1e-9
+
+
+def test_lm_cascade_transfer():
+    """Early-exit ORIC cascade on a tiny LM: decisions route the batch and
+    the blended NLL never exceeds the weak-only NLL (strong >= weak here
+    since the strong path includes the full depth)."""
+    from repro.configs import get_config
+    from repro.data.lm_synth import synth_lm_batch
+    from repro.models.lm import init_params, reduced
+    from repro.serving.cascade_serving import LMCascade
+
+    cfg = reduced(get_config("yi_6b"), num_layers=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def mk(seed):
+        toks, labels = synth_lm_batch(np.random.default_rng(seed), 16, 32, cfg.vocab_size)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+    cascade = LMCascade.fit(
+        params, cfg, exit_layer=2, calib_batches=[mk(1), mk(2)], ratio=0.25, epochs=10
+    )
+    out = cascade.serve_batch(params, mk(3))
+    assert 0.0 <= out["offload_ratio"] <= 0.7
+    assert np.all(np.isfinite(out["nll_final"]))
+    # routed quality is a mix of the two models' NLLs
+    lo = np.minimum(out["nll_weak"], out["nll_strong"]).mean()
+    hi = np.maximum(out["nll_weak"], out["nll_strong"]).mean()
+    assert lo - 1e-6 <= out["nll_final"].mean() <= hi + 1e-6
