@@ -1,0 +1,18 @@
+# Tier-1 verification + dev conveniences.
+#
+#   make install   editable install of src/repro (replaces the PYTHONPATH=src hack)
+#   make test      tier-1 test suite
+#   make bench     benchmark harness (writes artifacts/bench_results.csv)
+
+PY ?= python
+
+.PHONY: install test bench
+
+install:
+	$(PY) -m pip install -e .
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py

@@ -13,6 +13,8 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
   bench_table3_pipeline      per-image pipeline latency breakdown (Table III)
   bench_fig13_ratio_latency  detection time & mAP vs offloading ratio (Fig 13)
   bench_incremental_map      APAccumulator incremental vs full recompute
+  bench_oric_batch           vectorized oric_batch vs per-image loop
+  bench_engine_score         OffloadEngine fused-Pallas batched scoring
   bench_kernels              Pallas oracles (jnp path) per-call time
 """
 from __future__ import annotations
@@ -115,24 +117,28 @@ def bench_fig9_10_policies() -> None:
 
 
 def bench_table3_pipeline() -> None:
-    """Per-image latency breakdown on this host (Table III analogue)."""
+    """Per-image latency breakdown on this host (Table III analogue); the
+    decision stage is the unified OffloadEngine's batched score."""
     import jax
-    import jax.numpy as jnp
 
-    from repro.core import EstimatorConfig, RewardEstimator, extract_features
+    from repro.api import DetectionBoxFeatures, MLPRewardModel, OffloadEngine
+    from repro.core import EstimatorConfig
     from repro.data.shapes import ShapesDataset
     from repro.models.detector import STRONG, WEAK, decode_detections, detector_init
 
     val = ShapesDataset.generate(64, seed=5)
     pw = detector_init(jax.random.PRNGKey(0), WEAK)
     ps = detector_init(jax.random.PRNGKey(1), STRONG)
-    est = RewardEstimator(387, EstimatorConfig(epochs=1))
-    est.fit(np.zeros((8, 387), np.float32), np.zeros(8, np.float32))
+    eng = OffloadEngine(
+        feature_extractor=DetectionBoxFeatures(num_classes=8, image_size=64.0),
+        reward_model=MLPRewardModel(config=EstimatorConfig(hidden=(128,), epochs=1)),
+    )
+    eng.fit(features=np.zeros((8, 387), np.float32), rewards=np.zeros(8))
 
     us_weak = _timeit(lambda: decode_detections(pw, WEAK, val.images), n=2) / len(val)
     dets = decode_detections(pw, WEAK, val.images)
-    feats = np.stack([extract_features(d, 8, image_size=64.0) for d in dets])
-    us_est = _timeit(lambda: est.predict(feats), n=5) / len(val)
+    feats = eng.feature_extractor(dets)
+    us_est = _timeit(lambda: eng.score(features=feats), n=5) / len(val)
     us_strong = _timeit(lambda: decode_detections(ps, STRONG, val.images), n=2) / len(val)
     total_off = us_weak + us_est + us_strong
     emit("table3_weak_detector", us_weak, f"share_not_offloaded={us_weak/(us_weak+us_est)*100:.1f}%")
@@ -189,6 +195,43 @@ def bench_incremental_map() -> None:
     emit("incremental_map", us_inc, f"full_recompute_us={us_full:.0f};speedup={us_full/us_inc:.0f}x")
 
 
+def bench_oric_batch() -> None:
+    """Vectorized RewardOracle.oric_batch vs the per-image oric() loop."""
+    from repro.core.reward import RewardOracle
+
+    state = _pipeline_state()
+    pairs = state.val_pairs[:200]
+    rng = np.random.default_rng(0)
+    oracle = RewardOracle.from_pool(state.pool_weak_evals, 400, rng)
+
+    def loop():
+        return np.array([oracle.oric(im) for im in pairs])
+
+    us_loop = _timeit(loop, n=2)
+    us_vec = _timeit(lambda: oracle.oric_batch(pairs), n=2)
+    emit(
+        "oric_batch_vectorized", us_vec,
+        f"loop_us={us_loop:.0f};speedup={us_loop / max(us_vec, 1e-9):.2f}x",
+    )
+
+
+def bench_engine_score() -> None:
+    """OffloadEngine batched scoring through the fused Pallas MLP path."""
+    from repro.api import MLPRewardModel, OffloadEngine
+    from repro.core import EstimatorConfig
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (1024, 387)).astype(np.float32)
+    r = rng.normal(0, 1, 1024)
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(config=EstimatorConfig(hidden=(128,), epochs=2))
+    )
+    eng.fit(features=x, rewards=r)
+    eng.score(features=x)  # compile
+    us = _timeit(lambda: eng.score(features=x), n=5)
+    emit("engine_score_b1024", us / 1024, f"us_per_image;fused={eng.reward_model.fused}")
+
+
 def bench_kernels() -> None:
     import jax.numpy as jnp
 
@@ -223,6 +266,8 @@ def main() -> None:
     bench_table3_pipeline()
     bench_fig13_ratio_latency()
     bench_incremental_map()
+    bench_oric_batch()
+    bench_engine_score()
     bench_kernels()
     out = os.path.join(ART, "bench_results.csv")
     os.makedirs(ART, exist_ok=True)

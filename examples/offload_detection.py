@@ -1,12 +1,18 @@
 """The paper's full evaluation (Figs. 5/9/10, Tables II) from the cached
-pipeline — runs the complete experiment suite and prints a summary.
+pipeline — runs the complete experiment suite, prints a summary, then fits
+the deployable ``OffloadEngine`` artifact and round-trips it through
+save/load.
 
-Run:  PYTHONPATH=src python examples/offload_detection.py [--quick] [--force]
+Run:  python examples/offload_detection.py [--quick] [--force]
+      (after `pip install -e .`, or prefix with PYTHONPATH=src)
 """
 import argparse
-import json
+import os
 
-from repro.experiments.detection_repro import run_all
+from repro.api import OffloadEngine
+from repro.experiments.detection_repro import build_engine, build_pipeline, run_all
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../artifacts")
 
 
 def main() -> None:
@@ -26,6 +32,24 @@ def main() -> None:
     for name, cur in results["figure9_10"]["curves"].items():
         pts = ", ".join(f"{v:.0f}" for v in cur["norm"][:6])
         print(f"  {name:18s} [{pts}]  @ratios {results['figure9_10']['ratios'][:6]}")
+
+    # ---- deployable artifact: fit, save, reload, verify ------------------
+    print("\n===== OffloadEngine artifact =====")
+    state = build_pipeline()  # cached by run_all above
+    ctx = 400 if args.quick else 800
+    engine = build_engine(
+        state, context_size=ctx, ratio=0.2, epochs=10 if args.quick else 40
+    )
+    path = os.path.join(ARTIFACTS, "offload_engine")
+    engine.save(path)
+    reloaded = OffloadEngine.load(path)
+    probe = state.weak_dets_val[:64]
+    d1, d2 = engine.decide(probe), reloaded.decide(probe)
+    assert (d1.offload == d2.offload).all(), "save/load round trip diverged"
+    print(f"saved {path}.npz  (fused Pallas scoring: {engine.reward_model.fused})")
+    print(f"decisions on 64 probe images: ratio={d1.ratio:.2f}, round trip exact")
+    reloaded.set_ratio(0.5)
+    print(f"runtime re-budget to 0.5: ratio={reloaded.decide(probe).ratio:.2f}")
 
 
 if __name__ == "__main__":

@@ -3,11 +3,13 @@ early-exit serving (paper §V-A: the approach "is readily applicable to
 edge frameworks with embedded early exits").
 
 A small decoder serves batches of requests; the early-exit head (weak) runs
-"locally", an ORIC-style MORIC estimator predicts the reward of escalating
-each request to full depth ("edge"), and a runtime-adjustable threshold
-policy enforces the offload budget.
+"locally", the unified ``OffloadEngine`` (logits features → MORIC estimator
+→ runtime-adjustable threshold policy) decides per request whether to
+escalate to full depth ("edge"), and the calibrated engine is saved and
+reloaded as a deployable artifact.
 
-Run:  PYTHONPATH=src python examples/serve_cascade.py
+Run:  python examples/serve_cascade.py
+      (after `pip install -e .`, or prefix with PYTHONPATH=src)
 """
 import dataclasses
 import os
@@ -16,12 +18,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import OffloadEngine
 from repro.configs import get_config
 from repro.data.lm_synth import synth_lm_batch
 from repro.models.lm import init_params, reduced
 from repro.serving.cascade_serving import LMCascade
 
 CKPT = os.path.join(os.path.dirname(__file__), "../artifacts/lm_100m.npz")
+ENGINE_PATH = os.path.join(os.path.dirname(__file__), "../artifacts/lm_cascade_engine")
 
 
 def main() -> None:
@@ -57,7 +61,7 @@ def main() -> None:
     )
 
     for ratio in (0.1, 0.25, 0.5):
-        cascade.policy.set_ratio(ratio)  # runtime budget adjustment
+        cascade.set_ratio(ratio)  # runtime budget adjustment (via the engine)
         out = cascade.serve_batch(params, mk(99))
         print(
             f"budget={ratio:.2f}  actual={out['offload_ratio']:.2f}  "
@@ -65,6 +69,17 @@ def main() -> None:
             f"strong={out['nll_strong'].mean():.4f}  "
             f"cascade={out['nll_final'].mean():.4f}"
         )
+
+    # the calibrated decision stack is a deployable artifact
+    cascade.save(ENGINE_PATH)
+    reloaded = LMCascade.load(ENGINE_PATH, cfg)
+    out_a = cascade.serve_batch(params, mk(123))
+    out_b = reloaded.serve_batch(params, mk(123))
+    assert (out_a["offload"] == out_b["offload"]).all()
+    print(
+        f"saved+reloaded engine {ENGINE_PATH}.npz: decisions identical "
+        f"(fused Pallas scoring: {cascade.engine.reward_model.fused})"
+    )
 
 
 if __name__ == "__main__":

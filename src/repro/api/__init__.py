@@ -1,0 +1,46 @@
+"""Unified OffloadEngine API: one decision-stack object across detection,
+LM serving, experiments, and benchmarks.  See docs/API.md."""
+from repro.api.engine import DecisionBatch, OffloadEngine
+from repro.api.features import (
+    DetectionBoxFeatures,
+    FeatureExtractor,
+    LMLogitsFeatures,
+    logits_features,
+    make_feature_extractor,
+    register_feature_extractor,
+)
+from repro.api.policies import (
+    Policy,
+    QuantileThresholdPolicy,
+    TokenBucketPolicy,
+    TopKPolicy,
+    make_policy,
+    register_policy,
+)
+from repro.api.reward_model import (
+    CNNRewardModel,
+    MLPRewardModel,
+    RewardModel,
+    reward_model_from_state,
+)
+
+__all__ = [
+    "OffloadEngine",
+    "DecisionBatch",
+    "FeatureExtractor",
+    "DetectionBoxFeatures",
+    "LMLogitsFeatures",
+    "logits_features",
+    "make_feature_extractor",
+    "register_feature_extractor",
+    "Policy",
+    "QuantileThresholdPolicy",
+    "TopKPolicy",
+    "TokenBucketPolicy",
+    "make_policy",
+    "register_policy",
+    "RewardModel",
+    "MLPRewardModel",
+    "CNNRewardModel",
+    "reward_model_from_state",
+]

@@ -1,0 +1,214 @@
+"""`OffloadEngine` — the repo's single decision-stack object.
+
+Owns the paper's full deployable pipeline (Fig. 4 right-hand side):
+
+    weak output --FeatureExtractor--> features
+                --RewardModel-------> reward estimate        (§V MLP/CNN)
+                --RankTransform-----> MORIC rank target      (Eq. 6, fit time)
+                --Policy------------> offload decision       (§III threshold /
+                                                              topk / token_bucket)
+
+One engine is fit once (``fit``), scores/decides batches at serve time
+(``score``/``decide``), re-budgets at runtime (``set_ratio``), and
+round-trips through ``save``/``load`` as a deployable artifact.  Detection,
+LM early-exit serving, the experiments pipeline, and the benchmarks all
+construct this object instead of hand-wiring estimator/cdf/policy tuples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.api.features import FeatureExtractor, make_feature_extractor
+from repro.api.policies import Policy, make_policy
+from repro.api.reward_model import (
+    MLPRewardModel,
+    RewardModel,
+    reward_model_from_state,
+)
+from repro.core.reward import CdfTransform
+from repro.train.checkpoint import load_flat, save_flat
+
+
+@dataclass
+class DecisionBatch:
+    """One served batch: per-item reward estimates + offload mask."""
+
+    estimates: np.ndarray
+    offload: np.ndarray
+
+    @property
+    def ratio(self) -> float:
+        return float(np.mean(self.offload)) if self.offload.size else 0.0
+
+
+class OffloadEngine:
+    """The unified decision stack; see module docstring.
+
+    Parameters
+    ----------
+    feature_extractor : FeatureExtractor or None
+        Registered adapter mapping weak outputs to features.  ``None`` means
+        callers pass ready-made feature matrices (``features=`` keyword or
+        positionally as ``weak_outputs``).
+    reward_model : RewardModel
+        Defaults to a single-hidden-layer MLP so batched scoring runs the
+        fused Pallas ``estimator_mlp`` kernel.
+    transform : "cdf" | None
+        Rank transform applied to rewards before fitting (MORIC, Eq. 6);
+        ``None`` regresses the raw reward (the Fig. 9 "vanilla" ablation).
+    policy : str
+        Registered policy name: "threshold" (default), "topk", "token_bucket".
+    ratio : float
+        Target offloading ratio; adjustable later via ``set_ratio``.
+    """
+
+    def __init__(
+        self,
+        feature_extractor: Optional[FeatureExtractor] = None,
+        reward_model: Optional[RewardModel] = None,
+        transform: Optional[str] = "cdf",
+        policy: str = "threshold",
+        ratio: float = 0.2,
+        policy_kwargs: Optional[Dict[str, Any]] = None,
+    ):
+        if transform not in ("cdf", None):
+            raise ValueError(f"unknown transform {transform!r} (use 'cdf' or None)")
+        self.feature_extractor = feature_extractor
+        self.reward_model: RewardModel = (
+            reward_model if reward_model is not None else MLPRewardModel()
+        )
+        self.transform_kind = transform
+        self.transform: Optional[CdfTransform] = None
+        self.policy_name = policy
+        self.policy_kwargs = dict(policy_kwargs or {})
+        self.ratio = float(ratio)
+        self.policy: Optional[Policy] = None
+        self.calibration_scores: Optional[np.ndarray] = None
+        self.extra_meta: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------ fit
+
+    def _features(self, weak_outputs: Any, features: Optional[np.ndarray]) -> np.ndarray:
+        if features is not None:
+            return np.asarray(features, np.float32)
+        if weak_outputs is None:
+            raise ValueError("pass weak_outputs or features=")
+        if self.feature_extractor is None:
+            # no adapter: weak outputs ARE the features
+            return np.asarray(weak_outputs, np.float32)
+        return np.asarray(self.feature_extractor(weak_outputs), np.float32)
+
+    def fit(
+        self,
+        weak_outputs: Any = None,
+        rewards: Optional[np.ndarray] = None,
+        *,
+        features: Optional[np.ndarray] = None,
+    ) -> "OffloadEngine":
+        """Fit transform + reward model on calibration data, then derive the
+        policy from the calibration score distribution."""
+        if rewards is None:
+            raise ValueError("fit() needs rewards")
+        x = self._features(weak_outputs, features)
+        r = np.asarray(rewards, np.float64)
+        if self.transform_kind == "cdf":
+            self.transform = CdfTransform(r)
+            y = self.transform(r)
+        else:
+            self.transform = None
+            y = r
+        self.reward_model.fit(x, y)
+        self.calibration_scores = np.asarray(self.reward_model.predict(x), np.float64)
+        self.policy = make_policy(
+            self.policy_name, self.calibration_scores, self.ratio, **self.policy_kwargs
+        )
+        return self
+
+    # ---------------------------------------------------------------- serve
+
+    def score(
+        self, weak_outputs: Any = None, *, features: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """Batched reward estimates for weak outputs (Pallas-fused when the
+        reward model is the deployable single-hidden-layer MLP)."""
+        return np.asarray(self.reward_model.predict(self._features(weak_outputs, features)))
+
+    def decide(
+        self, weak_outputs: Any = None, *, features: Optional[np.ndarray] = None
+    ) -> DecisionBatch:
+        if self.policy is None:
+            raise RuntimeError("decide() before fit()/load()")
+        est = self.score(weak_outputs, features=features)
+        mask = np.asarray(self.policy.decide_batch(est), bool)
+        return DecisionBatch(estimates=est, offload=mask)
+
+    def set_ratio(self, ratio: float) -> None:
+        """Runtime budget adjustment (paper Table I row 3)."""
+        self.ratio = float(ratio)
+        if self.policy is not None:
+            self.policy.set_ratio(ratio)
+
+    # ------------------------------------------------------------ save/load
+
+    def save(self, path: str, extra_meta: Optional[Dict[str, Any]] = None) -> None:
+        """Persist the calibrated stack as one ``.npz`` artifact."""
+        if self.calibration_scores is None:
+            raise RuntimeError("save() before fit()")
+        model_arrays, model_meta = self.reward_model.state()
+        arrays: Dict[str, Any] = {
+            "model": model_arrays,
+            "calibration": self.calibration_scores,
+        }
+        if self.transform is not None:
+            arrays["transform_sorted"] = self.transform._sorted
+        fx = self.feature_extractor
+        # the policy may have been re-budgeted directly (back-compat callers
+        # hold it via LMCascade.policy): its ratio is the live one
+        live_ratio = float(getattr(self.policy, "ratio", self.ratio))
+        meta = {
+            "kind": "offload_engine",
+            "version": 1,
+            "ratio": live_ratio,
+            "transform": self.transform_kind,
+            "policy": {"name": self.policy_name, "kwargs": self.policy_kwargs},
+            "feature_extractor": (
+                {"name": fx.name, "spec": fx.spec()} if fx is not None else None
+            ),
+            "reward_model": model_meta,
+            "extra": extra_meta if extra_meta is not None else self.extra_meta,
+        }
+        save_flat(path, arrays, meta)
+
+    @classmethod
+    def load(cls, path: str) -> "OffloadEngine":
+        arrays, meta = load_flat(path)
+        if meta is None or meta.get("kind") != "offload_engine":
+            raise ValueError(f"{path} is not an OffloadEngine checkpoint")
+        fx_meta = meta.get("feature_extractor")
+        fx = (
+            make_feature_extractor(fx_meta["name"], **fx_meta["spec"])
+            if fx_meta
+            else None
+        )
+        engine = cls(
+            feature_extractor=fx,
+            reward_model=reward_model_from_state(arrays["model"], meta["reward_model"]),
+            transform=meta["transform"],
+            policy=meta["policy"]["name"],
+            ratio=meta["ratio"],
+            policy_kwargs=meta["policy"]["kwargs"],
+        )
+        if "transform_sorted" in arrays:
+            engine.transform = CdfTransform(arrays["transform_sorted"])
+        engine.extra_meta = meta.get("extra", {})
+        engine.calibration_scores = np.asarray(arrays["calibration"], np.float64)
+        engine.policy = make_policy(
+            engine.policy_name,
+            engine.calibration_scores,
+            engine.ratio,
+            **engine.policy_kwargs,
+        )
+        return engine

@@ -1,0 +1,135 @@
+"""Feature-extractor protocol + registered adapters (OffloadEngine inputs).
+
+A ``FeatureExtractor`` turns a batch of *weak* model outputs into the fixed
+(B, F) float matrix the reward estimator consumes — the paper's constraint
+that the estimator reads only the weak detector's result.  Adapters register
+under a string name so a saved engine can reconstruct its extractor.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import extract_features_batch, feature_dim
+from repro.detection.map_engine import Detections
+
+
+@runtime_checkable
+class FeatureExtractor(Protocol):
+    """Batch of weak outputs -> (B, F) feature matrix."""
+
+    name: str
+
+    def __call__(self, weak_outputs: Any) -> np.ndarray: ...
+
+    def spec(self) -> Dict[str, Any]:
+        """Constructor kwargs sufficient to rebuild this extractor."""
+        ...
+
+
+_EXTRACTORS: Dict[str, Callable[..., FeatureExtractor]] = {}
+
+
+def register_feature_extractor(name: str):
+    """Class decorator: register under ``name`` for save/load resolution."""
+
+    def deco(cls):
+        cls.name = name
+        _EXTRACTORS[name] = cls
+        return cls
+
+    return deco
+
+
+def make_feature_extractor(name: str, **kwargs) -> FeatureExtractor:
+    if name not in _EXTRACTORS:
+        raise KeyError(f"unknown feature extractor {name!r}; have {sorted(_EXTRACTORS)}")
+    return _EXTRACTORS[name](**kwargs)
+
+
+@register_feature_extractor("detection_boxes")
+class DetectionBoxFeatures:
+    """Top-K box features + global summary stats of a weak detector ([13]-style)."""
+
+    def __init__(self, num_classes: int, top_k: int = 25, image_size: float = 1.0):
+        self.num_classes = int(num_classes)
+        self.top_k = int(top_k)
+        self.image_size = float(image_size)
+
+    @property
+    def feature_dim(self) -> int:
+        return feature_dim(self.num_classes, self.top_k)
+
+    def __call__(self, weak_outputs: Sequence[Detections]) -> np.ndarray:
+        return extract_features_batch(
+            weak_outputs, self.num_classes, self.top_k, self.image_size
+        )
+
+    def spec(self) -> Dict[str, Any]:
+        return {
+            "num_classes": self.num_classes,
+            "top_k": self.top_k,
+            "image_size": self.image_size,
+        }
+
+
+def logits_features(
+    logits: jnp.ndarray, labels: Optional[jnp.ndarray] = None, top_k: int = 8
+) -> np.ndarray:
+    """Per-request features from WEAK-head logits only (deployable inputs):
+    mean/max entropy, mean margin, mean top-k probs, mean max-prob.
+
+    ``labels`` marks valid positions (>= 0); ``None`` treats every position
+    as valid (the decode-time case where no gold labels exist).
+    """
+    lf = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(lf)
+    if labels is None:
+        labels = jnp.zeros(logits.shape[:-1], jnp.int32)
+    entropy = -(p * lf).sum(-1)  # (B,S)
+    topv, _ = jax.lax.top_k(p, top_k)  # (B,S,k)
+    margin = topv[..., 0] - topv[..., 1]
+    vmask = labels >= 0
+    denom = jnp.maximum(vmask.sum(-1), 1)
+
+    def mavg(x):
+        return (x * vmask).sum(-1) / denom
+
+    feats = jnp.concatenate(
+        [
+            mavg(entropy)[:, None],
+            jnp.max(entropy * vmask, axis=-1)[:, None],
+            mavg(margin)[:, None],
+            mavg(topv[..., 0])[:, None],
+            (topv * vmask[..., None]).sum(1) / denom[:, None],  # mean top-k probs
+        ],
+        axis=-1,
+    )
+    return np.asarray(feats)
+
+
+@register_feature_extractor("lm_logits")
+class LMLogitsFeatures:
+    """Entropy/margin/top-k summary of weak-head logits (the LM analogue of
+    top-25 box confidences).  Accepts ``(logits, labels)`` tuples or dicts
+    with ``logits``/``labels`` keys; ``labels`` may be None at decode time."""
+
+    def __init__(self, top_k: int = 8):
+        self.top_k = int(top_k)
+
+    @property
+    def feature_dim(self) -> int:
+        return 4 + self.top_k
+
+    def __call__(self, weak_outputs: Any) -> np.ndarray:
+        if isinstance(weak_outputs, dict):
+            logits, labels = weak_outputs["logits"], weak_outputs.get("labels")
+        else:
+            logits, labels = weak_outputs
+        return logits_features(logits, labels, self.top_k)
+
+    def spec(self) -> Dict[str, Any]:
+        return {"top_k": self.top_k}

@@ -1,0 +1,152 @@
+"""Decision-policy registry for the OffloadEngine.
+
+Every policy is constructed from ``(calibration_scores, ratio)`` — the
+calibration distribution of reward estimates the engine records at fit time —
+and exposes the common contract:
+
+    decide(estimate) -> bool          streaming, one item
+    decide_batch(estimates) -> mask   a batch (token_bucket: in arrival order)
+    set_ratio(ratio)                  runtime budget adjustment (Table I)
+
+Registered: ``threshold`` (the paper's deployable quantile threshold),
+``topk`` (exact per-batch top-k, the oracle-style evaluation policy), and
+``token_bucket`` (hard rate constraint with burst tolerance, [23]-style).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.policy import ThresholdPolicy, TokenBucket
+from repro.core.reward import topk_offload_mask
+
+
+@runtime_checkable
+class Policy(Protocol):
+    name: str
+
+    def decide(self, estimate: float) -> bool: ...
+
+    def decide_batch(self, estimates: np.ndarray) -> np.ndarray: ...
+
+    def set_ratio(self, ratio: float) -> None: ...
+
+    def spec(self) -> Dict[str, Any]:
+        """Extra constructor kwargs (beyond calibration_scores/ratio)."""
+        ...
+
+
+_POLICIES: Dict[str, Callable[..., Policy]] = {}
+
+
+def register_policy(name: str):
+    def deco(cls):
+        cls.name = name
+        _POLICIES[name] = cls
+        return cls
+
+    return deco
+
+
+def make_policy(
+    name: str, calibration_scores: np.ndarray, ratio: float, **kwargs
+) -> Policy:
+    if name not in _POLICIES:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(_POLICIES)}")
+    return _POLICIES[name](calibration_scores, ratio, **kwargs)
+
+
+@register_policy("threshold")
+class QuantileThresholdPolicy:
+    """Offload iff estimate > T, T = (1-r)-quantile of calibration scores."""
+
+    def __init__(self, calibration_scores: np.ndarray, ratio: float):
+        self._inner = ThresholdPolicy(calibration_scores, ratio)
+
+    @property
+    def ratio(self) -> float:
+        return self._inner.ratio
+
+    @property
+    def threshold(self) -> float:
+        return self._inner.threshold
+
+    def set_ratio(self, ratio: float) -> None:
+        self._inner.set_ratio(ratio)
+
+    def decide(self, estimate: float) -> bool:
+        return self._inner.decide(estimate)
+
+    def decide_batch(self, estimates: np.ndarray) -> np.ndarray:
+        return self._inner.decide_batch(estimates)
+
+    def spec(self) -> Dict[str, Any]:
+        return {}
+
+
+@register_policy("topk")
+class TopKPolicy:
+    """Exact per-batch budget: offload the top ``ratio`` fraction of the
+    batch (ties resolved stably by position).  Single-item ``decide`` falls
+    back to the calibration quantile threshold."""
+
+    def __init__(self, calibration_scores: np.ndarray, ratio: float):
+        self._threshold = ThresholdPolicy(calibration_scores, ratio)
+        self.ratio = self._threshold.ratio
+
+    def set_ratio(self, ratio: float) -> None:
+        self._threshold.set_ratio(ratio)
+        self.ratio = self._threshold.ratio
+
+    def decide(self, estimate: float) -> bool:
+        return self._threshold.decide(estimate)
+
+    def decide_batch(self, estimates: np.ndarray) -> np.ndarray:
+        return topk_offload_mask(np.asarray(estimates, np.float64), self.ratio)
+
+    def spec(self) -> Dict[str, Any]:
+        return {}
+
+
+@register_policy("token_bucket")
+class TokenBucketPolicy:
+    """Hard offload-rate constraint with burst tolerance ``depth``; the rate
+    is the target ratio and the base threshold its calibration quantile."""
+
+    def __init__(self, calibration_scores: np.ndarray, ratio: float, depth: float = 8.0):
+        self._cal = np.sort(np.asarray(calibration_scores, dtype=np.float64))
+        self.depth = float(depth)
+        self.set_ratio(ratio)
+
+    def set_ratio(self, ratio: float) -> None:
+        self.ratio = float(np.clip(ratio, 0.0, 1.0))
+        # finite sentinels at the edges: the bucket's scarcity interpolation
+        # thr = base + (1-base)*scarcity is nan-free only for finite base
+        if self._cal.size == 0 or self.ratio >= 1.0:
+            base = -1e30
+        elif self.ratio <= 0.0:
+            base = 1e30
+        else:
+            base = float(np.quantile(self._cal, 1.0 - self.ratio))
+        # a re-budget must not refill the bucket — carrying the level over
+        # keeps the hard rate constraint across runtime ratio changes
+        prev = getattr(self, "bucket", None)
+        level = min(prev.level, self.depth) if prev is not None else None
+        self.bucket = TokenBucket(
+            rate=self.ratio, depth=self.depth, base_threshold=base, level=level
+        )
+
+    def decide(self, estimate: float) -> bool:
+        return self.bucket.decide(float(estimate))
+
+    def decide_batch(self, estimates: np.ndarray) -> np.ndarray:
+        # sequential by construction: estimates arrive in stream order
+        return np.fromiter(
+            (self.decide(float(e)) for e in np.asarray(estimates).ravel()),
+            dtype=bool,
+            count=np.asarray(estimates).size,
+        )
+
+    def spec(self) -> Dict[str, Any]:
+        return {"depth": self.depth}

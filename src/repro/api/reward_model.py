@@ -1,0 +1,242 @@
+"""Reward-model interface for the OffloadEngine.
+
+``MLPRewardModel`` wraps :class:`repro.core.estimator.RewardEstimator`; when
+the trained MLP has a single hidden layer and a sigmoid head (the deployable
+on-device shape), batched prediction takes the fused Pallas kernel
+``repro.kernels.estimator_mlp`` (interpret-mode fallback off-TPU).  The CNN
+variant from the §V-A input study sits behind the same interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimator import (
+    EstimatorConfig,
+    RewardEstimator,
+    cnn_apply,
+    cnn_init,
+)
+from repro.kernels.estimator_mlp import estimator_mlp
+from repro.train.adamw import adamw_init, adamw_update
+
+
+@runtime_checkable
+class RewardModel(Protocol):
+    """fit/predict over (B, F) features (or feature maps for the CNN)."""
+
+    kind: str
+
+    def fit(self, x: np.ndarray, y: np.ndarray): ...
+
+    def predict(self, x: np.ndarray) -> np.ndarray: ...
+
+    def state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(arrays, meta) for checkpointing."""
+        ...
+
+
+class MLPRewardModel:
+    """MLP reward estimator with the fused Pallas batched-predict path."""
+
+    kind = "mlp"
+
+    def __init__(
+        self,
+        in_dim: Optional[int] = None,
+        config: Optional[EstimatorConfig] = None,
+        use_fused: bool = True,
+        interpret: bool = True,
+    ):
+        self.config = config if config is not None else EstimatorConfig(hidden=(128,))
+        self.in_dim = in_dim
+        self.use_fused = use_fused
+        self.interpret = interpret
+        self.estimator: Optional[RewardEstimator] = (
+            RewardEstimator(in_dim, self.config) if in_dim is not None else None
+        )
+
+    def _ensure(self, in_dim: int) -> RewardEstimator:
+        if self.estimator is None:
+            self.in_dim = in_dim
+            self.estimator = RewardEstimator(in_dim, self.config)
+        return self.estimator
+
+    @property
+    def fused(self) -> bool:
+        """True when batched predict runs the fused Pallas kernel: exactly
+        one hidden layer (params = layer0 + layer1) and a sigmoid head."""
+        return (
+            self.use_fused
+            and self.estimator is not None
+            and len(self.estimator.params) == 2
+            and self.config.sigmoid_out
+        )
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        return self._ensure(int(np.shape(x)[1])).fit(
+            np.asarray(x, np.float32), np.asarray(y, np.float32)
+        )
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        if self.estimator is None:
+            raise RuntimeError("predict() before fit()")
+        est = self.estimator
+        x = np.asarray(x, np.float32)
+        if not self.fused:
+            return est.predict(x)
+        if self.config.standardize:
+            x = (x - est._mu) / est._sigma
+        p = est.params
+        return np.asarray(
+            estimator_mlp(
+                jnp.asarray(x, jnp.float32),
+                p["layer0"]["w"],
+                p["layer0"]["b"],
+                p["layer1"]["w"][:, 0],
+                p["layer1"]["b"][0],
+                interpret=self.interpret,
+            )
+        )
+
+    def state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        if self.estimator is None:
+            raise RuntimeError("state() before fit()")
+        est = self.estimator
+        arrays = {"params": est.params, "mu": est._mu, "sigma": est._sigma}
+        meta = {
+            "kind": self.kind,
+            "in_dim": self.in_dim,
+            "use_fused": self.use_fused,
+            "config": dataclasses.asdict(self.config),
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays: Dict[str, Any], meta: Dict[str, Any]) -> "MLPRewardModel":
+        ckw = dict(meta["config"])
+        ckw["hidden"] = tuple(ckw["hidden"])
+        model = cls(
+            in_dim=int(meta["in_dim"]),
+            config=EstimatorConfig(**ckw),
+            use_fused=bool(meta.get("use_fused", True)),
+        )
+        est = model.estimator
+        est.params = jax.tree.map(
+            lambda a: jnp.asarray(a, jnp.float32), dict(arrays["params"])
+        )
+        est._mu = np.asarray(arrays["mu"], np.float32)
+        est._sigma = np.asarray(arrays["sigma"], np.float32)
+        return model
+
+
+class CNNRewardModel:
+    """CNN over weak-backbone feature maps (§V-A early-exit input study),
+    behind the same fit/predict contract.  ``x`` is (B, H, W, C)."""
+
+    kind = "cnn"
+
+    def __init__(
+        self,
+        in_channels: Optional[int] = None,
+        width: int = 16,
+        lr: float = 2e-3,
+        epochs: int = 30,
+        batch_size: int = 256,
+        weighted: bool = True,
+        seed: int = 0,
+    ):
+        self.in_channels = in_channels
+        self.width = width
+        self.lr = lr
+        self.epochs = epochs
+        self.batch_size = batch_size
+        self.weighted = weighted
+        self.seed = seed
+        self.params = (
+            cnn_init(jax.random.PRNGKey(seed), in_channels, width)
+            if in_channels is not None
+            else None
+        )
+
+    @property
+    def fused(self) -> bool:
+        return False
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        if self.params is None:
+            self.in_channels = x.shape[-1]
+            self.params = cnn_init(jax.random.PRNGKey(self.seed), self.in_channels, self.width)
+        weighted = self.weighted
+
+        def loss_fn(p, xb, yb):
+            pred = cnn_apply(p, xb)
+            err = jnp.square(pred - yb)
+            if weighted:
+                err = jnp.maximum(yb, 0.0) * err
+            return jnp.mean(err)
+
+        @jax.jit
+        def step(p, o, xb, yb):
+            loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+            p, o = adamw_update(grads, o, p, self.lr)
+            return p, o, loss
+
+        params, opt = self.params, adamw_init(self.params)
+        rng = np.random.default_rng(self.seed)
+        xj = jnp.asarray(x)
+        yj = jnp.asarray(y)
+        losses = []
+        for _ in range(self.epochs):
+            perm = rng.permutation(x.shape[0])
+            for s in range(0, len(perm), self.batch_size):
+                sel = perm[s : s + self.batch_size]
+                params, opt, loss = step(params, opt, xj[sel], yj[sel])
+                losses.append(float(loss))
+        self.params = params
+        return losses
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        if self.params is None:
+            raise RuntimeError("predict() before fit()")
+        return np.asarray(cnn_apply(self.params, jnp.asarray(x, jnp.float32)))
+
+    def state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        if self.params is None:
+            raise RuntimeError("state() before fit()")
+        meta = {
+            "kind": self.kind,
+            "in_channels": self.in_channels,
+            "width": self.width,
+            "lr": self.lr,
+            "epochs": self.epochs,
+            "batch_size": self.batch_size,
+            "weighted": self.weighted,
+            "seed": self.seed,
+        }
+        return {"params": self.params}, meta
+
+    @classmethod
+    def from_state(cls, arrays: Dict[str, Any], meta: Dict[str, Any]) -> "CNNRewardModel":
+        kw = {k: v for k, v in meta.items() if k != "kind"}
+        model = cls(**kw)
+        model.params = jax.tree.map(
+            lambda a: jnp.asarray(a, jnp.float32), dict(arrays["params"])
+        )
+        return model
+
+
+_MODELS = {"mlp": MLPRewardModel, "cnn": CNNRewardModel}
+
+
+def reward_model_from_state(arrays: Dict[str, Any], meta: Dict[str, Any]) -> RewardModel:
+    kind = meta["kind"]
+    if kind not in _MODELS:
+        raise KeyError(f"unknown reward model kind {kind!r}")
+    return _MODELS[kind].from_state(arrays, meta)

@@ -2,17 +2,16 @@
 
 Domain-agnostic: a ``Cascade`` pairs a weak inference fn, a reward-estimate
 fn (reading only weak output), a strong inference fn, and a decision policy.
-Used (a) by the detection repro and (b) by LM cascade/early-exit serving in
-``repro.serving.cascade_serving``.
+The canonical construction path is :meth:`Cascade.from_engine`, which wires
+the estimate fn and policy from a fitted :class:`repro.api.OffloadEngine`;
+the explicit-field form remains for hand-rolled stacks.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, List
 
 import numpy as np
-
-from repro.core.policy import ThresholdPolicy
 
 
 @dataclass
@@ -30,7 +29,29 @@ class Cascade:
     weak_fn: Callable[[Any], Any]
     estimate_fn: Callable[[Any], float]  # weak output -> reward estimate
     strong_fn: Callable[[Any], Any]
-    policy: ThresholdPolicy
+    policy: Any  # anything with decide(estimate) -> bool
+
+    @classmethod
+    def from_engine(
+        cls,
+        weak_fn: Callable[[Any], Any],
+        strong_fn: Callable[[Any], Any],
+        engine,
+    ) -> "Cascade":
+        """Item-at-a-time cascade driven by a fitted ``OffloadEngine``: the
+        engine's reward model scores each weak output and its policy decides."""
+        if engine.policy is None:
+            raise ValueError("engine must be fit() before building a Cascade")
+
+        def estimate(weak_out: Any) -> float:
+            return float(engine.score([weak_out])[0])
+
+        return cls(
+            weak_fn=weak_fn,
+            estimate_fn=estimate,
+            strong_fn=strong_fn,
+            policy=engine.policy,
+        )
 
     def process(self, item: Any) -> CascadeRecord:
         weak_out = self.weak_fn(item)

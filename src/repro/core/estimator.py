@@ -83,8 +83,10 @@ class RewardEstimator:
     """Train/eval wrapper around the MLP; the on-device inference path is
     mirrored by the fused Pallas kernel in ``repro.kernels.estimator_mlp``."""
 
-    def __init__(self, in_dim: int, config: EstimatorConfig = EstimatorConfig()):
-        self.config = config
+    def __init__(self, in_dim: int, config: Optional[EstimatorConfig] = None):
+        # default must be constructed per instance: EstimatorConfig is
+        # mutable, so a shared default would leak state across estimators
+        self.config = config = config if config is not None else EstimatorConfig()
         self.in_dim = in_dim
         key = jax.random.PRNGKey(config.seed)
         self.params = mlp_init(key, in_dim, config.hidden)

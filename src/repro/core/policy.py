@@ -8,7 +8,7 @@ hard rate constraint with burst tolerance for the dynamic-budget setting.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -50,7 +50,7 @@ class TokenBucket:
     rate: float
     depth: float
     base_threshold: float
-    level: float = field(default=None)  # type: ignore[assignment]
+    level: Optional[float] = None  # None -> starts full (= depth)
 
     def __post_init__(self) -> None:
         if self.level is None:

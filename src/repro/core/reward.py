@@ -90,7 +90,12 @@ class RewardOracle:
         return scale * (self.mapc(img.strong) - self.mapc(img.weak))
 
     def oric_batch(self, imgs: Sequence[MatchedImage]) -> np.ndarray:
-        return np.array([self.oric(im) for im in imgs])
+        """Batched Eq. 5: the context accumulator's base AP sums are hoisted
+        out of the loop (two passes total instead of O(N) per-image passes)."""
+        scale = self.context_size + 1
+        strong = self._acc.map_with_images([im.strong for im in imgs])
+        weak = self._acc.map_with_images([im.weak for im in imgs])
+        return scale * (strong - weak)
 
 
 def ori(img: MatchedImage, iou_thresholds: Sequence[float] = (0.5,)) -> float:

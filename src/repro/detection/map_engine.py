@@ -223,6 +223,50 @@ class APAccumulator:
             return 0.0
         return float(np.nanmean(np.stack(vals)))
 
+    def map_with_images(self, evs: Sequence[ImageEval]) -> np.ndarray:
+        """Batched ``map_with_image``: one array of exact mAP(accumulated ∪
+        {image_i}) values.
+
+        The base accumulator's AP sum/count are hoisted out of the per-image
+        loop, so each image costs only its touched classes instead of a full
+        O(classes) dict copy + nanmean pass per call.
+        """
+        frozen = self._freeze()
+        base = self._base_aps()
+        T = len(self.iou_thresholds)
+        base_sum = 0.0
+        base_cnt = 0
+        for a in base.values():
+            valid = ~np.isnan(a)
+            base_sum += float(a[valid].sum())
+            base_cnt += int(valid.sum())
+        empty = (np.zeros((0,)), np.zeros((T, 0), dtype=bool))
+        out = np.empty(len(evs), dtype=np.float64)
+        for i, ev in enumerate(evs):
+            total, count = base_sum, base_cnt
+            for c in set(ev.per_class) | set(ev.gt_counts):
+                s0, t0 = frozen.get(c, empty)
+                if c in ev.per_class:
+                    s1, t1 = ev.per_class[c]
+                    s = np.concatenate([s0, s1])
+                    t = np.concatenate([t0, t1], axis=1)
+                else:
+                    s, t = s0, t0
+                n_gt = self._gt.get(c, 0) + ev.gt_counts.get(c, 0)
+                new = np.array(
+                    [average_precision(s, t[ti], n_gt) for ti in range(T)]
+                )
+                old = base.get(c)
+                if old is not None:
+                    valid = ~np.isnan(old)
+                    total -= float(old[valid].sum())
+                    count -= int(valid.sum())
+                valid = ~np.isnan(new)
+                total += float(new[valid].sum())
+                count += int(valid.sum())
+            out[i] = total / count if count else 0.0
+        return out
+
 
 def dataset_map(
     detections: Iterable[Detections],

@@ -20,12 +20,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.api import DetectionBoxFeatures, MLPRewardModel, OffloadEngine, make_policy
 from repro.core import (
     AdaptiveFeedingSVM,
     CdfTransform,
     EstimatorConfig,
     MatchedImage,
-    RewardEstimator,
     RewardOracle,
     cascade_map,
     dcsb_signals,
@@ -129,6 +129,34 @@ def build_pipeline(
     with open(cache, "wb") as f:
         pickle.dump(state, f)
     return state
+
+
+def build_engine(
+    state: PipelineState,
+    context_size: int = 800,
+    ratio: float = 0.2,
+    seed: int = 0,
+    epochs: int = 40,
+    hidden: Tuple[int, ...] = (128,),
+) -> "OffloadEngine":
+    """The deployable artifact: ORIC rewards on the calibration split → one
+    fitted ``OffloadEngine`` over weak-detector box features.  The default
+    single hidden layer makes batched scoring take the fused Pallas
+    ``estimator_mlp`` path; ``engine.save(path)`` ships the whole stack."""
+    rng = np.random.default_rng(seed)
+    oracle = RewardOracle.from_pool(state.pool_weak_evals, context_size, rng)
+    rewards = oracle.oric_batch(state.val_pairs)
+    engine = OffloadEngine(
+        feature_extractor=DetectionBoxFeatures(
+            num_classes=NUM_CLASSES, image_size=state.image_size
+        ),
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=tuple(hidden), epochs=epochs, seed=seed)
+        ),
+        ratio=ratio,
+    )
+    engine.fit(state.weak_dets_val, rewards)
+    return engine
 
 
 # ---------------------------------------------------------------------------
@@ -265,19 +293,15 @@ def train_estimators(
         for f in range(folds):
             tr = fold_ix != f
             te = ~tr
-            t_tr = targets[tr]
-            if rank:
-                cdf = CdfTransform(t_tr)
-                y_tr = cdf(t_tr)
-            else:
-                y_tr = t_tr
-            est = RewardEstimator(
-                x.shape[1],
-                EstimatorConfig(weighted=weighted, sigmoid_out=sigmoid,
-                                epochs=epochs, seed=seed + f),
+            engine = OffloadEngine(
+                reward_model=MLPRewardModel(
+                    config=EstimatorConfig(weighted=weighted, sigmoid_out=sigmoid,
+                                           epochs=epochs, seed=seed + f)
+                ),
+                transform="cdf" if rank else None,
             )
-            est.fit(x[tr], y_tr)
-            preds[te] = est.predict(x[te])
+            engine.fit(features=x[tr], rewards=targets[tr])
+            preds[te] = engine.score(features=x[te])
         return preds
 
     preds = {
@@ -367,14 +391,14 @@ def figure7_input_study(
 ) -> Dict:
     """§V-A input study: estimate MORIC from the weak detector's OUTPUT
     (MLP on box features) vs from its backbone FEATURE MAPS (CNN) — the
-    early-exit integration point.  Paper finding: limited impact."""
+    early-exit integration point.  Paper finding: limited impact.  Both
+    estimators run behind the OffloadEngine reward-model interface."""
     import jax
     import jax.numpy as jnp
 
-    from repro.core.estimator import cnn_apply, cnn_init
+    from repro.api import CNNRewardModel
     from repro.data.shapes import ShapesDataset
     from repro.models.detector import WEAK, detector_forward
-    from repro.train.adamw import adamw_init, adamw_update
     from repro.train.checkpoint import load_pytree
     from repro.models.detector import detector_init
 
@@ -394,42 +418,28 @@ def figure7_input_study(
         feats.append(np.asarray(fm))
     fmaps = np.concatenate(feats)  # (N, G, G, C)
 
-    # 2-fold CV CNN regression with the Eq. 7 weighted loss
+    # 2-fold CV: both input variants behind the engine's RewardModel
+    # interface (targets are already rank-transformed, so transform=None)
     n = len(y)
     fold = np.arange(n) % 2
     rng.shuffle(fold)
     preds_cnn = np.zeros(n)
-    for f in range(2):
-        tr, te = fold != f, fold == f
-        params = cnn_init(jax.random.PRNGKey(seed + f), fmaps.shape[-1])
-        opt = adamw_init(params)
-
-        def loss_fn(p, xb, yb):
-            pred = cnn_apply(p, xb)
-            return jnp.mean(jnp.maximum(yb, 0.0) * jnp.square(pred - yb))
-
-        step = jax.jit(
-            lambda p, o, xb, yb: (
-                lambda l, g: adamw_update(g, o, p, 2e-3) + (l,)
-            )(*jax.value_and_grad(loss_fn)(p, xb, yb))
-        )
-        xtr = jnp.asarray(fmaps[tr])
-        ytr = jnp.asarray(y[tr], jnp.float32)
-        idx = np.where(tr)[0]
-        for _ in range(epochs):
-            perm = rng.permutation(len(idx))
-            for s in range(0, len(perm) - 255, 256):
-                sel = perm[s : s + 256]
-                params, opt, _ = step(params, opt, xtr[sel], ytr[sel])
-        preds_cnn[te] = np.asarray(cnn_apply(params, jnp.asarray(fmaps[te])))
-
-    # reference: output-feature MLP (single fit/predict split to match)
     preds_mlp = np.zeros(n)
     for f in range(2):
         tr, te = fold != f, fold == f
-        est = RewardEstimator(state.features_val.shape[1], EstimatorConfig(epochs=epochs))
-        est.fit(state.features_val[tr], y[tr])
-        preds_mlp[te] = est.predict(state.features_val[te])
+        cnn_engine = OffloadEngine(
+            reward_model=CNNRewardModel(epochs=epochs, seed=seed + f),
+            transform=None,
+        )
+        cnn_engine.fit(features=fmaps[tr], rewards=y[tr])
+        preds_cnn[te] = cnn_engine.score(features=fmaps[te])
+
+        mlp_engine = OffloadEngine(
+            reward_model=MLPRewardModel(config=EstimatorConfig(epochs=epochs)),
+            transform=None,
+        )
+        mlp_engine.fit(features=state.features_val[tr], rewards=y[tr])
+        preds_mlp[te] = mlp_engine.score(features=state.features_val[te])
 
     out: Dict = {"ratios": list(ratios), "curves": {}}
     for name, preds in (("output_mlp", preds_mlp), ("featmap_cnn", preds_cnn)):
@@ -447,20 +457,19 @@ def token_bucket_study(
     seed: int = 0,
 ) -> Dict:
     """Dynamic-budget serving ([23]-style): a token bucket enforcing a hard
-    offload rate on a streaming trace vs the static threshold policy."""
-    from repro.core.policy import ThresholdPolicy, TokenBucket
-
+    offload rate on a streaming trace vs the static threshold policy.  Both
+    policies come from the OffloadEngine registry, calibrated on the same
+    estimate distribution."""
     rng = np.random.default_rng(seed)
     est = bundle.preds["MORIC"]
     order = rng.permutation(len(est))  # arrival order
     # static threshold at the same target ratio
-    pol = ThresholdPolicy(est, ratio=rate)
+    pol = make_policy("threshold", est, ratio=rate)
     static_mask = np.zeros(len(est), bool)
     static_mask[order] = pol.decide_batch(est[order])
-    tb = TokenBucket(rate=rate, depth=depth, base_threshold=float(np.quantile(est, 1 - rate)))
+    tb = make_policy("token_bucket", est, ratio=rate, depth=depth)
     tb_mask = np.zeros(len(est), bool)
-    for i in order:
-        tb_mask[i] = tb.decide(float(est[i]))
+    tb_mask[order] = tb.decide_batch(est[order])
     return {
         "target_rate": rate,
         "static": {"ratio": float(static_mask.mean()),

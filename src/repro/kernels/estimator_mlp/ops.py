@@ -31,6 +31,8 @@ def estimator_mlp(
     interpret: bool = True,
 ) -> jnp.ndarray:
     B, F = x.shape
+    if B == 0:  # degenerate batch: the padded grid would be empty
+        return jnp.zeros((0,), jnp.float32)
     H = w1.shape[1]
     Bp = -(-B // tile_b) * tile_b
     Fp = -(-F // 128) * 128

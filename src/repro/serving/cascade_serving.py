@@ -3,7 +3,8 @@
 The paper's weak/strong detector cascade maps onto LM serving as an
 **early-exit cascade**: the "weak detector" is the model truncated at layer
 k with the shared LM head (local device); the "strong detector" is the full
-depth (edge pod).  The decision system transfers wholesale:
+depth (edge pod).  The decision system transfers wholesale and is owned by
+one :class:`repro.api.OffloadEngine`:
 
   reward      R_i  = per-request quality delta (NLL_weak − NLL_strong)
   rank xform  cdf fit on a CONTEXT batch of reference requests (Eq. 6) —
@@ -13,7 +14,8 @@ depth (edge pod).  The decision system transfers wholesale:
               reward CDF/threshold.  Recorded in DESIGN.md §4.
   estimator   MLP on weak-head logits features (top-k probs, entropy,
               margin — the analogue of top-25 box confidences), trained
-              with the Eq. 7 weighted MSE.
+              with the Eq. 7 weighted MSE; single hidden layer so batched
+              scoring runs the fused Pallas ``estimator_mlp`` kernel.
   policy      quantile threshold, ratio adjustable at runtime.
 
 Supports dense / vlm / moe / rwkv stacks (any arch whose layers are a
@@ -21,20 +23,27 @@ single scan stack, plus MoE's two-stack split).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.estimator import EstimatorConfig, RewardEstimator
-from repro.core.policy import ThresholdPolicy
-from repro.core.reward import CdfTransform
-from repro.models.lm import LMConfig, _logits, forward
+from repro.api import LMLogitsFeatures, MLPRewardModel, OffloadEngine
+from repro.api.features import logits_features  # re-export (moved to repro.api)
+from repro.core.estimator import EstimatorConfig
+from repro.models.lm import LMConfig, forward
 
 PyTree = dict
+
+__all__ = [
+    "LMCascade",
+    "logits_features",
+    "sequence_nll",
+    "truncate_params",
+    "truncated_config",
+]
 
 
 def truncate_params(params: PyTree, cfg: LMConfig, exit_layer: int) -> PyTree:
@@ -76,43 +85,27 @@ def sequence_nll(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     return nll.sum(-1) / jnp.maximum(valid.sum(-1), 1)
 
 
-def logits_features(logits: jnp.ndarray, labels: jnp.ndarray, top_k: int = 8) -> np.ndarray:
-    """Per-request features from WEAK-head logits only (deployable inputs):
-    mean/max entropy, mean margin, mean top-k probs, mean max-prob."""
-    lf = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    p = jnp.exp(lf)
-    valid = (labels >= 0)[..., None]
-    entropy = -(p * lf).sum(-1)  # (B,S)
-    topv, _ = jax.lax.top_k(p, top_k)  # (B,S,k)
-    margin = topv[..., 0] - topv[..., 1]
-    vmask = labels >= 0
-    denom = jnp.maximum(vmask.sum(-1), 1)
-
-    def mavg(x):
-        return (x * vmask).sum(-1) / denom
-
-    feats = jnp.concatenate(
-        [
-            mavg(entropy)[:, None],
-            jnp.max(entropy * vmask, axis=-1)[:, None],
-            mavg(margin)[:, None],
-            mavg(topv[..., 0])[:, None],
-            (topv * vmask[..., None]).sum(1) / denom[:, None],  # mean top-k probs
-        ],
-        axis=-1,
-    )
-    return np.asarray(feats)
-
-
 @dataclass
 class LMCascade:
-    """Trained ORIC-style cascade for an LM."""
+    """Trained ORIC-style cascade for an LM: truncation point + the unified
+    decision engine (features → estimator → rank transform → policy)."""
 
     cfg: LMConfig
     exit_layer: int
-    estimator: RewardEstimator
-    cdf: CdfTransform
-    policy: ThresholdPolicy
+    engine: OffloadEngine
+
+    # -- back-compat views of the engine's stack ---------------------------
+    @property
+    def estimator(self):
+        return self.engine.reward_model.estimator
+
+    @property
+    def cdf(self):
+        return self.engine.transform
+
+    @property
+    def policy(self):
+        return self.engine.policy
 
     @classmethod
     def fit(
@@ -125,9 +118,10 @@ class LMCascade:
         epochs: int = 40,
         seed: int = 0,
     ) -> "LMCascade":
-        """Compute oracle rewards on calibration data, fit the MORIC-style
-        estimator, derive the quantile threshold."""
+        """Compute oracle rewards on calibration data, then fit the engine
+        (MORIC-style estimator + quantile threshold) in one step."""
         wcfg = truncated_config(cfg, exit_layer)
+        extractor = LMLogitsFeatures()
         feats, rewards = [], []
         for batch in calib_batches:
             wparams = truncate_params(params, cfg, exit_layer)
@@ -136,17 +130,16 @@ class LMCascade:
             nll_w = sequence_nll(wlogits, batch["labels"])
             nll_s = sequence_nll(slogits, batch["labels"])
             rewards.append(np.asarray(nll_w - nll_s))  # >0: offload helps
-            feats.append(logits_features(wlogits, batch["labels"]))
-        x = np.concatenate(feats)
-        r = np.concatenate(rewards)
-        cdf = CdfTransform(r)
-        y = cdf(r)
-        est = RewardEstimator(
-            x.shape[1], EstimatorConfig(hidden=(64, 32), epochs=epochs, seed=seed)
+            feats.append(extractor((wlogits, batch["labels"])))
+        engine = OffloadEngine(
+            feature_extractor=extractor,
+            reward_model=MLPRewardModel(
+                config=EstimatorConfig(hidden=(64,), epochs=epochs, seed=seed)
+            ),
+            ratio=ratio,
         )
-        est.fit(x, y)
-        policy = ThresholdPolicy(est.predict(x), ratio)
-        return cls(cfg=cfg, exit_layer=exit_layer, estimator=est, cdf=cdf, policy=policy)
+        engine.fit(features=np.concatenate(feats), rewards=np.concatenate(rewards))
+        return cls(cfg=cfg, exit_layer=exit_layer, engine=engine)
 
     def serve_batch(self, params: PyTree, batch: Dict) -> Dict:
         """Weak pass for everyone; strong pass only for offloaded requests.
@@ -154,9 +147,8 @@ class LMCascade:
         wcfg = truncated_config(self.cfg, self.exit_layer)
         wparams = truncate_params(params, self.cfg, self.exit_layer)
         wlogits, _ = forward(wparams, wcfg, batch)
-        x = logits_features(wlogits, batch["labels"])
-        est = self.estimator.predict(x)
-        offload = self.policy.decide_batch(est)
+        decision = self.engine.decide((wlogits, batch["labels"]))
+        offload = decision.offload
         nll_w = np.asarray(sequence_nll(wlogits, batch["labels"]))
         # strong pass (in a real deployment only offloaded rows cross the
         # pod axis; here we compute the full batch and select)
@@ -164,10 +156,29 @@ class LMCascade:
         nll_s = np.asarray(sequence_nll(slogits, batch["labels"]))
         nll_final = np.where(offload, nll_s, nll_w)
         return {
-            "estimates": est,
+            "estimates": decision.estimates,
             "offload": offload,
             "nll_weak": nll_w,
             "nll_strong": nll_s,
             "nll_final": nll_final,
-            "offload_ratio": float(np.mean(offload)),
+            "offload_ratio": decision.ratio,
         }
+
+    def set_ratio(self, ratio: float) -> None:
+        """Runtime offload-budget adjustment (delegates to the engine)."""
+        self.engine.set_ratio(ratio)
+
+    def save(self, path: str) -> None:
+        """Persist the decision stack (not the LM weights) as one artifact."""
+        self.engine.save(
+            path, extra_meta={"exit_layer": self.exit_layer, "cfg_name": self.cfg.name}
+        )
+
+    @classmethod
+    def load(cls, path: str, cfg: LMConfig) -> "LMCascade":
+        """Rebuild from a saved engine; the LM config/params are supplied by
+        the caller (the engine artifact carries only the decision stack)."""
+        engine = OffloadEngine.load(path)
+        return cls(
+            cfg=cfg, exit_layer=int(engine.extra_meta["exit_layer"]), engine=engine
+        )

@@ -1,4 +1,5 @@
-"""Batched autoregressive decode loop over ``decode_step``."""
+"""Batched autoregressive decode loop over ``decode_step``, plus the
+engine-gated weak/strong cascade decode (``cascade_generate``)."""
 from __future__ import annotations
 
 import functools
@@ -6,8 +7,9 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models.lm import LMConfig, decode_step, prefill
+from repro.models.lm import LMConfig, decode_step, forward, prefill
 
 
 def generate(
@@ -45,3 +47,52 @@ def generate(
         )
         tok = pick(logits, sub)
     return jnp.stack(toks, axis=1)
+
+
+def cascade_generate(
+    params,
+    cfg: LMConfig,
+    batch: Dict,
+    steps: int,
+    *,
+    engine,
+    exit_layer: int,
+    capacity: Optional[int] = None,
+    greedy: bool = True,
+    key=None,
+) -> Dict:
+    """Engine-gated decode: every request decodes through the early-exit
+    (weak) stack; rows the ``OffloadEngine`` offloads decode at full depth
+    instead.  The decision reads only the weak prompt logits — the same
+    deployability constraint as the detection cascade.
+
+    ``batch`` values must share the leading batch dimension (dense/rwkv/moe
+    stacks).  Returns generated tokens plus the decision trace.
+    """
+    from repro.serving.cascade_serving import truncate_params, truncated_config
+
+    wcfg = truncated_config(cfg, exit_layer)
+    wparams = truncate_params(params, cfg, exit_layer)
+    wlogits, _ = forward(wparams, wcfg, batch)
+    decision = engine.decide((wlogits, batch.get("labels")))
+
+    # decisions are known before decoding (they read only prompt logits), so
+    # each row decodes through exactly one stack
+    B = int(np.shape(batch["tokens"])[0])
+    out = np.zeros((B, steps), dtype=np.int32)
+    for p, c, idx in (
+        (wparams, wcfg, np.where(~decision.offload)[0]),
+        (params, cfg, np.where(decision.offload)[0]),
+    ):
+        if idx.size:
+            sub = {k: jnp.asarray(v)[idx] for k, v in batch.items()}
+            toks = generate(
+                p, c, sub, steps, capacity=capacity, greedy=greedy, key=key
+            )
+            out[idx] = np.asarray(toks)
+    return {
+        "tokens": out,
+        "offload": decision.offload,
+        "estimates": decision.estimates,
+        "offload_ratio": decision.ratio,
+    }

@@ -1,14 +1,22 @@
-"""Pytree checkpointing to .npz (flat key-path encoding, no pickle)."""
+"""Pytree checkpointing to .npz (flat key-path encoding, no pickle).
+
+Two layers: ``save_pytree``/``load_pytree`` for model params (load requires a
+``like`` template), and ``save_flat``/``load_flat`` for self-describing
+nested string-keyed dicts of arrays plus a JSON metadata block — the format
+``repro.api.OffloadEngine.save`` uses for deployable decision stacks.
+"""
 from __future__ import annotations
 
+import json
 import os
-from typing import Any
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
 _SEP = "||"
+_META_KEY = "__meta__"
 
 
 def _flatten(tree: PyTree):
@@ -36,3 +44,41 @@ def load_pytree(path: str, like: PyTree) -> PyTree:
         arr = data[key]
         leaves.append(arr.astype(np.asarray(leaf).dtype).reshape(np.shape(leaf)))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _flatten_strdict(tree: Dict[str, Any], prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    for k, v in tree.items():
+        key = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(_flatten_strdict(v, key))
+        else:
+            out[key] = np.asarray(v)
+    return out
+
+
+def save_flat(path: str, arrays: Dict[str, Any], meta: Optional[dict] = None) -> None:
+    """Save a nested string-keyed dict of arrays (+ JSON meta) to one .npz."""
+    flat = _flatten_strdict(arrays)
+    if meta is not None:
+        flat[_META_KEY] = np.asarray(json.dumps(meta))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_flat(path: str) -> Tuple[Dict[str, Any], Optional[dict]]:
+    """Inverse of ``save_flat``: (nested arrays dict, meta-or-None).  Needs
+    no template — the key paths are self-describing."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    meta = None
+    tree: Dict[str, Any] = {}
+    for key in data.files:
+        if key == _META_KEY:
+            meta = json.loads(str(data[key].item()))
+            continue
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+    return tree, meta

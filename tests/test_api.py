@@ -1,0 +1,316 @@
+"""The unified OffloadEngine API: fit/score/decide, the fused Pallas scoring
+path, feature-extractor adapters, the policy registry, and save/load."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    DetectionBoxFeatures,
+    LMLogitsFeatures,
+    MLPRewardModel,
+    OffloadEngine,
+    make_feature_extractor,
+    make_policy,
+)
+from repro.core import Cascade, EstimatorConfig, extract_features_batch
+
+
+def synth(n=256, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    rewards = 2.0 * x[:, 0] + 0.3 * rng.normal(size=n)
+    return x, rewards
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, rewards = synth()
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(32,), epochs=60, batch_size=64)
+        ),
+        ratio=0.3,
+    )
+    eng.fit(features=x, rewards=rewards)
+    return eng, x, rewards
+
+
+def test_fit_score_decide(fitted):
+    eng, x, rewards = fitted
+    scores = eng.score(features=x)
+    assert scores.shape == (len(x),)
+    assert 0.0 <= scores.min() and scores.max() <= 1.0  # MORIC ranks
+    # the estimator learned the reward ordering
+    assert np.corrcoef(scores, rewards)[0, 1] > 0.5
+    d = eng.decide(features=x)
+    assert d.offload.dtype == bool and abs(d.ratio - 0.3) < 0.05
+
+
+def test_empty_and_single_item_batches(fitted):
+    eng, x, _ = fitted
+    d1 = eng.decide(features=x[:1])
+    assert d1.offload.shape == (1,)
+    d0 = eng.decide(features=np.zeros((0, x.shape[1]), np.float32))
+    assert d0.offload.shape == (0,) and d0.ratio == 0.0
+
+
+def test_set_ratio_runtime(fitted):
+    eng, x, _ = fitted
+    try:
+        eng.set_ratio(0.6)
+        assert abs(eng.decide(features=x).ratio - 0.6) < 0.05
+    finally:
+        eng.set_ratio(0.3)
+
+
+def test_score_uses_fused_pallas_path(fitted):
+    """Batched score must run the fused estimator_mlp kernel (interpret-mode
+    fallback) and agree with the pure-jnp estimator path."""
+    import jax.numpy as jnp
+
+    from repro.kernels.estimator_mlp import estimator_mlp_ref
+
+    eng, x, _ = fitted
+    assert eng.reward_model.fused
+    est = eng.reward_model.estimator
+    xs = (x - est._mu) / est._sigma
+    p = est.params
+    want = np.asarray(
+        estimator_mlp_ref(
+            jnp.asarray(xs), p["layer0"]["w"], p["layer0"]["b"],
+            p["layer1"]["w"][:, 0], p["layer1"]["b"][0],
+        )
+    )
+    np.testing.assert_allclose(eng.score(features=x), want, atol=1e-5)
+    np.testing.assert_allclose(eng.score(features=x), est.predict(x), atol=1e-5)
+
+
+def test_multilayer_model_falls_back_to_jnp():
+    x, rewards = synth(n=64)
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(config=EstimatorConfig(hidden=(16, 8), epochs=3)),
+    )
+    eng.fit(features=x, rewards=rewards)
+    assert not eng.reward_model.fused
+    np.testing.assert_array_equal(
+        eng.score(features=x), eng.reward_model.estimator.predict(x)
+    )
+
+
+def test_cnn_reward_model_behind_engine(rng):
+    """The §V-A feature-map CNN fits behind the same engine contract."""
+    from repro.api import CNNRewardModel
+
+    fmaps = rng.normal(0, 1, (64, 8, 8, 4)).astype(np.float32)
+    rewards = fmaps.mean(axis=(1, 2, 3))
+    eng = OffloadEngine(
+        reward_model=CNNRewardModel(epochs=2, batch_size=32), ratio=0.25
+    )
+    eng.fit(features=fmaps, rewards=rewards)
+    assert not eng.reward_model.fused
+    scores = eng.score(features=fmaps)
+    assert scores.shape == (64,) and np.isfinite(scores).all()
+    assert 0.0 <= eng.decide(features=fmaps).ratio <= 1.0
+
+
+def test_save_load_roundtrip(fitted, tmp_path):
+    eng, x, _ = fitted
+    path = str(tmp_path / "engine")
+    eng.save(path, extra_meta={"note": "unit-test"})
+    loaded = OffloadEngine.load(path)
+    np.testing.assert_array_equal(eng.score(features=x), loaded.score(features=x))
+    np.testing.assert_array_equal(
+        eng.decide(features=x).offload, loaded.decide(features=x).offload
+    )
+    assert loaded.ratio == eng.ratio
+    assert loaded.transform is not None
+    np.testing.assert_allclose(loaded.transform._sorted, eng.transform._sorted)
+    # runtime re-budget still works on the loaded engine
+    loaded.set_ratio(0.7)
+    assert abs(loaded.decide(features=x).ratio - 0.7) < 0.05
+
+
+def test_save_load_with_feature_extractor(noisy_pair, tmp_path):
+    """An engine with a registered extractor decides from RAW weak outputs
+    after reload — the full deployable-artifact contract."""
+    from repro.core import RewardOracle, match_pairs
+    from repro.detection.map_engine import match_detections
+
+    gts, weak, strong = noisy_pair
+    pairs = match_pairs(weak, strong, gts)
+    pool = [match_detections(d, g, (0.5,)) for d, g in zip(weak[:30], gts[:30])]
+    rewards = RewardOracle.from_pool(
+        pool, 25, np.random.default_rng(0)
+    ).oric_batch(pairs)
+    eng = OffloadEngine(
+        feature_extractor=DetectionBoxFeatures(num_classes=8, image_size=64.0),
+        reward_model=MLPRewardModel(config=EstimatorConfig(hidden=(32,), epochs=5)),
+        ratio=0.25,
+    )
+    eng.fit(weak, rewards)
+    path = str(tmp_path / "det_engine")
+    eng.save(path)
+    loaded = OffloadEngine.load(path)
+    assert loaded.feature_extractor.spec() == eng.feature_extractor.spec()
+    np.testing.assert_array_equal(eng.decide(weak).offload, loaded.decide(weak).offload)
+
+
+def test_detection_feature_adapter(noisy_pair):
+    _, weak, _ = noisy_pair
+    fx = DetectionBoxFeatures(num_classes=8, image_size=64.0)
+    np.testing.assert_array_equal(
+        fx(weak), extract_features_batch(weak, 8, image_size=64.0)
+    )
+    assert fx.feature_dim == fx(weak).shape[1]
+
+
+def test_lm_logits_feature_adapter(rng):
+    import jax.numpy as jnp
+
+    logits = jnp.asarray(rng.normal(0, 1, (4, 6, 32)), jnp.float32)
+    labels = jnp.asarray(
+        np.where(rng.uniform(size=(4, 6)) < 0.8, rng.integers(0, 32, (4, 6)), -1)
+    )
+    fx = LMLogitsFeatures(top_k=8)
+    feats = fx((logits, labels))
+    assert feats.shape == (4, fx.feature_dim) and np.isfinite(feats).all()
+    # decode-time path: no labels -> every position valid
+    feats_nolab = fx((logits, None))
+    assert feats_nolab.shape == (4, fx.feature_dim) and np.isfinite(feats_nolab).all()
+
+
+def test_feature_extractor_registry():
+    fx = make_feature_extractor("detection_boxes", num_classes=3, top_k=5)
+    assert fx.spec()["top_k"] == 5
+    with pytest.raises(KeyError):
+        make_feature_extractor("no_such_adapter")
+
+
+def test_token_bucket_rebudget_keeps_level():
+    """set_ratio must not refill the bucket — no free burst on re-budget."""
+    tb = make_policy("token_bucket", np.linspace(0, 1, 100), ratio=0.5, depth=4.0)
+    for e in (0.99, 0.98, 0.97):
+        tb.decide(e)
+    drained = tb.bucket.level
+    assert drained < 4.0
+    tb.set_ratio(0.5)
+    assert tb.bucket.level <= drained + tb.ratio
+
+
+def test_save_records_live_policy_ratio(fitted, tmp_path):
+    """Back-compat callers re-budget the policy directly; save/load must
+    still round-trip the decisions."""
+    eng, x, _ = fitted
+    try:
+        eng.policy.set_ratio(0.55)  # bypasses engine.set_ratio
+        path = str(tmp_path / "live_ratio")
+        eng.save(path)
+        loaded = OffloadEngine.load(path)
+        assert loaded.ratio == pytest.approx(0.55)
+        np.testing.assert_array_equal(
+            eng.decide(features=x).offload, loaded.decide(features=x).offload
+        )
+    finally:
+        eng.set_ratio(0.3)
+
+
+def test_policy_registry_contract():
+    rng = np.random.default_rng(0)
+    cal = rng.uniform(size=1000)
+    thr = make_policy("threshold", cal, ratio=0.2)
+    assert abs(thr.decide_batch(cal).mean() - 0.2) < 0.03
+    topk = make_policy("topk", cal, ratio=0.2)
+    assert topk.decide_batch(cal).sum() == round(0.2 * len(cal))
+    tb = make_policy("token_bucket", cal, ratio=0.1, depth=4.0)
+    mask = tb.decide_batch(cal)
+    assert mask.mean() <= 0.1 + 4.0 / len(cal) + 1e-9
+    with pytest.raises(KeyError):
+        make_policy("no_such_policy", cal, ratio=0.2)
+
+
+def test_cascade_from_engine(fitted):
+    eng, x, _ = fitted
+    strong_calls = []
+
+    def weak_fn(item):
+        return item  # items ARE feature rows (engine has no extractor)
+
+    def strong_fn(item):
+        strong_calls.append(1)
+        return item * 2
+
+    cas = Cascade.from_engine(weak_fn, strong_fn, eng)
+    records = cas.run(list(x[:40]))
+    ratio = cas.offload_ratio(records)
+    assert len(strong_calls) == sum(r.offloaded for r in records)
+    assert 0.0 <= ratio <= 1.0
+    # per-item estimates agree with the engine's batched scoring
+    np.testing.assert_allclose(
+        [r.estimate for r in records], eng.score(features=x[:40]), atol=1e-6
+    )
+
+
+def test_lm_cascade_save_load(tmp_path):
+    """LMCascade persists its decision stack through the engine artifact."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data.lm_synth import synth_lm_batch
+    from repro.models.lm import init_params, reduced
+    from repro.serving.cascade_serving import LMCascade
+
+    cfg = reduced(get_config("yi_6b"), num_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def mk(seed):
+        toks, labels = synth_lm_batch(np.random.default_rng(seed), 8, 16, cfg.vocab_size)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+    cascade = LMCascade.fit(
+        params, cfg, exit_layer=1, calib_batches=[mk(1)], ratio=0.25, epochs=3
+    )
+    assert cascade.engine.reward_model.fused  # single hidden layer -> Pallas
+    path = str(tmp_path / "lm_engine")
+    cascade.save(path)
+    loaded = LMCascade.load(path, cfg)
+    assert loaded.exit_layer == cascade.exit_layer
+    a = cascade.serve_batch(params, mk(5))
+    b = loaded.serve_batch(params, mk(5))
+    np.testing.assert_array_equal(a["offload"], b["offload"])
+    np.testing.assert_allclose(a["estimates"], b["estimates"], atol=1e-6)
+
+
+def test_cascade_generate_routes_by_engine():
+    """Engine-gated decode: offloaded rows get full-depth tokens."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data.lm_synth import synth_lm_batch
+    from repro.models.lm import init_params, reduced
+    from repro.serving.cascade_serving import LMCascade
+    from repro.serving.decode_loop import cascade_generate, generate
+
+    cfg = reduced(get_config("yi_6b"), num_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def mk(seed):
+        toks, labels = synth_lm_batch(np.random.default_rng(seed), 8, 16, cfg.vocab_size)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+    cascade = LMCascade.fit(
+        params, cfg, exit_layer=1, calib_batches=[mk(1)], ratio=0.5, epochs=3
+    )
+    batch = mk(7)
+    out = cascade_generate(
+        params, cfg, batch, steps=4, engine=cascade.engine,
+        exit_layer=cascade.exit_layer,
+    )
+    assert out["tokens"].shape == (8, 4)
+    assert out["offload"].shape == (8,)
+    if out["offload"].any():
+        idx = np.where(out["offload"])[0]
+        strong = np.asarray(
+            generate(params, cfg, {k: v[idx] for k, v in batch.items()}, steps=4)
+        )
+        np.testing.assert_array_equal(out["tokens"][idx], strong)

@@ -1,0 +1,77 @@
+"""Policy edge cases: threshold at ratio 0/1, token-bucket drain/refill
+invariants, top-k tie stability."""
+import numpy as np
+
+from repro.core import ThresholdPolicy, TokenBucket, topk_offload_mask
+
+
+def test_threshold_ratio_zero_never_offloads():
+    cal = np.random.default_rng(0).uniform(size=500)
+    pol = ThresholdPolicy(cal, ratio=0.0)
+    assert pol.threshold == np.inf
+    assert not pol.decide(1e9)
+    assert not pol.decide_batch(np.array([0.0, 0.5, 1.0, 1e9])).any()
+
+
+def test_threshold_ratio_one_always_offloads():
+    cal = np.random.default_rng(0).uniform(size=500)
+    pol = ThresholdPolicy(cal, ratio=1.0)
+    assert pol.threshold == -np.inf
+    assert pol.decide(-1e9)
+    assert pol.decide_batch(np.array([-1e9, 0.0, 1.0])).all()
+
+
+def test_threshold_ratio_clipped():
+    cal = np.random.default_rng(0).uniform(size=100)
+    assert ThresholdPolicy(cal, ratio=-0.5).ratio == 0.0
+    assert ThresholdPolicy(cal, ratio=7.0).ratio == 1.0
+
+
+def test_token_bucket_default_level_is_depth():
+    tb = TokenBucket(rate=0.1, depth=4.0, base_threshold=0.5)
+    assert tb.level == 4.0
+    tb2 = TokenBucket(rate=0.1, depth=4.0, base_threshold=0.5, level=1.5)
+    assert tb2.level == 1.5
+
+
+def test_token_bucket_level_invariants():
+    """Level stays in [0, depth] through arbitrary drain/refill traffic."""
+    rng = np.random.default_rng(0)
+    tb = TokenBucket(rate=0.3, depth=3.0, base_threshold=0.2)
+    for e in rng.uniform(size=3000):
+        tb.decide(float(e))
+        assert 0.0 <= tb.level <= tb.depth + 1e-12
+
+
+def test_token_bucket_drains_then_refills():
+    tb = TokenBucket(rate=0.0, depth=2.0, base_threshold=0.0)
+    # full bucket: scarcity 0, threshold = base -> spend a token
+    assert tb.decide(0.99)
+    # drained to the last token: scarcity-adjusted threshold hits 1.0
+    assert not tb.decide(0.999)
+    # refill restores capacity and the base threshold
+    tb.rate = 1.0
+    assert tb.decide(0.99)
+
+
+def test_token_bucket_never_spends_below_one_token():
+    tb = TokenBucket(rate=0.01, depth=1.0, base_threshold=0.0)
+    assert tb.decide(1.5)  # clears the scarcity threshold, spends the token
+    for _ in range(5):
+        assert not tb.decide(2.0)  # level < 1: hard no regardless of estimate
+    assert tb.level >= 0.0
+
+
+def test_topk_tie_stability():
+    """Equal scores are broken by position (stable argsort): the earliest
+    indices win, and the mask is deterministic."""
+    scores = np.array([0.5, 0.5, 0.5, 0.5, 0.1])
+    mask = topk_offload_mask(scores, ratio=0.4)  # k = 2
+    np.testing.assert_array_equal(mask, [True, True, False, False, False])
+    np.testing.assert_array_equal(mask, topk_offload_mask(scores, 0.4))
+
+
+def test_topk_edge_ratios():
+    scores = np.random.default_rng(0).uniform(size=10)
+    assert topk_offload_mask(scores, 0.0).sum() == 0
+    assert topk_offload_mask(scores, 1.0).all()

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.reward import CdfTransform, topk_offload_mask
 from repro.detection.boxes import box_iou_np
