@@ -1,12 +1,13 @@
 # Tier-1 verification + dev conveniences.
 #
-#   make install   editable install of src/repro (replaces the PYTHONPATH=src hack)
-#   make test      tier-1 test suite
-#   make bench     benchmark harness (writes artifacts/bench_results.csv)
+#   make install      editable install of src/repro (replaces the PYTHONPATH=src hack)
+#   make test         tier-1 test suite
+#   make bench        benchmark harness (writes artifacts/bench_results.csv)
+#   make bench-smoke  artifact-free benches only (CI; writes bench_results_smoke.csv)
 
 PY ?= python
 
-.PHONY: install test bench
+.PHONY: install test bench bench-smoke
 
 install:
 	$(PY) -m pip install -e .
@@ -16,3 +17,6 @@ test:
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py
+
+bench-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py --smoke

@@ -15,10 +15,15 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
   bench_incremental_map      APAccumulator incremental vs full recompute
   bench_oric_batch           vectorized oric_batch vs per-image loop
   bench_engine_score         OffloadEngine fused-Pallas batched scoring
+  bench_dispatcher_throughput  streaming OffloadRuntime end-to-end frames/s
   bench_kernels              Pallas oracles (jnp path) per-call time
+
+``--smoke`` runs only the artifact-free benches (engine scoring, dispatcher
+throughput, kernels) — the CI job.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -232,6 +237,45 @@ def bench_engine_score() -> None:
     emit("engine_score_b1024", us / 1024, f"us_per_image;fused={eng.reward_model.fused}")
 
 
+def _smoke_engine(hidden=(128,), n=1024, d=387, seed=0):
+    from repro.api import MLPRewardModel, OffloadEngine
+    from repro.core import EstimatorConfig
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    r = rng.normal(0, 1, n)
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(config=EstimatorConfig(hidden=hidden, epochs=2))
+    )
+    eng.fit(features=x, rewards=r)
+    return eng, x
+
+
+def bench_dispatcher_throughput() -> None:
+    """Streaming serve loop end to end: session micro-batched scoring through
+    the fused Pallas path + multi-edge dispatch, per strategy."""
+    from repro.runtime import default_edge_fleet, simulate
+
+    eng, x = _smoke_engine()
+    n = len(x)
+    for strategy in ("round_robin", "least_loaded", "score_weighted"):
+        def run():
+            return simulate(
+                eng, features=x, edges=default_edge_fleet(3, seed=0),
+                strategy=strategy, ratio=0.3, micro_batch=64, seed=0,
+            )
+
+        us = _timeit(run, n=2, warmup=1)
+        trace = run()
+        out = trace.outcome_counts()
+        fps = n / (us / 1e6)
+        emit(
+            f"dispatcher_{strategy}_b{n}", us / n,
+            f"frames_per_s={fps:.0f};offloaded={out.get('offloaded', 0)}"
+            f";degraded={out.get('degraded', 0)};fused={eng.reward_model.fused}",
+        )
+
+
 def bench_kernels() -> None:
     import jax.numpy as jnp
 
@@ -256,20 +300,28 @@ def bench_kernels() -> None:
          "jnp_oracle;pallas_validated_in_tests")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="artifact-free benches only (engine score, dispatcher, kernels)",
+    )
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    bench_fig5_context_gain()
-    bench_fig5_context_cost()
-    bench_table2_conservatism()
-    bench_fig6_errors()
-    bench_fig9_10_policies()
-    bench_table3_pipeline()
-    bench_fig13_ratio_latency()
-    bench_incremental_map()
-    bench_oric_batch()
+    if not args.smoke:
+        bench_fig5_context_gain()
+        bench_fig5_context_cost()
+        bench_table2_conservatism()
+        bench_fig6_errors()
+        bench_fig9_10_policies()
+        bench_table3_pipeline()
+        bench_fig13_ratio_latency()
+        bench_incremental_map()
+        bench_oric_batch()
     bench_engine_score()
+    bench_dispatcher_throughput()
     bench_kernels()
-    out = os.path.join(ART, "bench_results.csv")
+    out = os.path.join(ART, "bench_results_smoke.csv" if args.smoke else "bench_results.csv")
     os.makedirs(ART, exist_ok=True)
     with open(out, "w") as f:
         f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")

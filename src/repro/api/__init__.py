@@ -5,6 +5,7 @@ from repro.api.features import (
     DetectionBoxFeatures,
     FeatureExtractor,
     LMLogitsFeatures,
+    list_feature_extractors,
     logits_features,
     make_feature_extractor,
     register_feature_extractor,
@@ -14,6 +15,7 @@ from repro.api.policies import (
     QuantileThresholdPolicy,
     TokenBucketPolicy,
     TopKPolicy,
+    list_policies,
     make_policy,
     register_policy,
 )
@@ -30,6 +32,8 @@ __all__ = [
     "FeatureExtractor",
     "DetectionBoxFeatures",
     "LMLogitsFeatures",
+    "list_feature_extractors",
+    "list_policies",
     "logits_features",
     "make_feature_extractor",
     "register_feature_extractor",

@@ -101,6 +101,14 @@ class OffloadEngine:
             return np.asarray(weak_outputs, np.float32)
         return np.asarray(self.feature_extractor(weak_outputs), np.float32)
 
+    def features(
+        self, weak_outputs: Any = None, *, features: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """Resolve weak outputs to the (B, F) feature matrix the reward model
+        consumes — the public entry point for the runtime session layer,
+        which extracts once per stream batch and then scores micro-batches."""
+        return self._features(weak_outputs, features)
+
     def fit(
         self,
         weak_outputs: Any = None,
@@ -163,17 +171,20 @@ class OffloadEngine:
             "calibration": self.calibration_scores,
         }
         if self.transform is not None:
-            arrays["transform_sorted"] = self.transform._sorted
+            arrays["transform_sorted"] = self.transform.state()["sorted_rewards"]
         fx = self.feature_extractor
         # the policy may have been re-budgeted directly (back-compat callers
         # hold it via LMCascade.policy): its ratio is the live one
         live_ratio = float(getattr(self.policy, "ratio", self.ratio))
+        # injected clocks (time-based policies) are runtime wiring, never
+        # part of the artifact — a loaded engine gets a fresh clock
+        policy_kwargs = {k: v for k, v in self.policy_kwargs.items() if k != "clock"}
         meta = {
             "kind": "offload_engine",
             "version": 1,
             "ratio": live_ratio,
             "transform": self.transform_kind,
-            "policy": {"name": self.policy_name, "kwargs": self.policy_kwargs},
+            "policy": {"name": self.policy_name, "kwargs": policy_kwargs},
             "feature_extractor": (
                 {"name": fx.name, "spec": fx.spec()} if fx is not None else None
             ),
@@ -202,7 +213,9 @@ class OffloadEngine:
             policy_kwargs=meta["policy"]["kwargs"],
         )
         if "transform_sorted" in arrays:
-            engine.transform = CdfTransform(arrays["transform_sorted"])
+            engine.transform = CdfTransform.from_state(
+                {"sorted_rewards": arrays["transform_sorted"]}
+            )
         engine.extra_meta = meta.get("extra", {})
         engine.calibration_scores = np.asarray(arrays["calibration"], np.float64)
         engine.policy = make_policy(

@@ -7,7 +7,16 @@ under a string name so a saved engine can reconstruct its extractor.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Protocol, Sequence, runtime_checkable
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    runtime_checkable,
+)
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +53,16 @@ def register_feature_extractor(name: str):
     return deco
 
 
+def list_feature_extractors() -> List[str]:
+    """Registered extractor names (for runtime configs and error messages)."""
+    return sorted(_EXTRACTORS)
+
+
 def make_feature_extractor(name: str, **kwargs) -> FeatureExtractor:
     if name not in _EXTRACTORS:
-        raise KeyError(f"unknown feature extractor {name!r}; have {sorted(_EXTRACTORS)}")
+        raise KeyError(
+            f"unknown feature extractor {name!r}; have {list_feature_extractors()}"
+        )
     return _EXTRACTORS[name](**kwargs)
 
 

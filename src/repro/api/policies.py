@@ -14,7 +14,7 @@ Registered: ``threshold`` (the paper's deployable quantile threshold),
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Protocol, runtime_checkable
+from typing import Any, Callable, Dict, List, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -49,11 +49,16 @@ def register_policy(name: str):
     return deco
 
 
+def list_policies() -> List[str]:
+    """Registered policy names (for runtime configs and error messages)."""
+    return sorted(_POLICIES)
+
+
 def make_policy(
     name: str, calibration_scores: np.ndarray, ratio: float, **kwargs
 ) -> Policy:
     if name not in _POLICIES:
-        raise KeyError(f"unknown policy {name!r}; have {sorted(_POLICIES)}")
+        raise KeyError(f"unknown policy {name!r}; have {list_policies()}")
     return _POLICIES[name](calibration_scores, ratio, **kwargs)
 
 
@@ -112,11 +117,23 @@ class TopKPolicy:
 @register_policy("token_bucket")
 class TokenBucketPolicy:
     """Hard offload-rate constraint with burst tolerance ``depth``; the rate
-    is the target ratio and the base threshold its calibration quantile."""
+    is the target ratio and the base threshold its calibration quantile.
 
-    def __init__(self, calibration_scores: np.ndarray, ratio: float, depth: float = 8.0):
+    ``clock`` (optional, not serialized) switches the bucket to time-based
+    refill — see :class:`repro.core.policy.TokenBucket`; streaming sessions
+    inject their simulation clock here.
+    """
+
+    def __init__(
+        self,
+        calibration_scores: np.ndarray,
+        ratio: float,
+        depth: float = 8.0,
+        clock: Optional[Callable[[], float]] = None,
+    ):
         self._cal = np.sort(np.asarray(calibration_scores, dtype=np.float64))
         self.depth = float(depth)
+        self.clock = clock
         self.set_ratio(ratio)
 
     def set_ratio(self, ratio: float) -> None:
@@ -134,7 +151,8 @@ class TokenBucketPolicy:
         prev = getattr(self, "bucket", None)
         level = min(prev.level, self.depth) if prev is not None else None
         self.bucket = TokenBucket(
-            rate=self.ratio, depth=self.depth, base_threshold=base, level=level
+            rate=self.ratio, depth=self.depth, base_threshold=base, level=level,
+            clock=self.clock,
         )
 
     def decide(self, estimate: float) -> bool:

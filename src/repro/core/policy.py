@@ -8,8 +8,8 @@ hard rate constraint with burst tolerance for the dynamic-budget setting.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -45,19 +45,45 @@ class TokenBucket:
     ``rate`` tokens arrive per image; bucket depth ``depth``; an offload
     consumes one token.  The effective threshold rises as the bucket drains,
     making the policy spend scarce tokens only on the highest estimates.
+
+    With ``clock`` (any zero-arg callable returning a monotone float, e.g. a
+    simulation's manual clock), refill becomes ``rate`` tokens per *time
+    unit* instead of per arrival.  ``decide`` never reads the wall clock
+    itself, so streaming simulations and tests stay reproducible.
     """
 
     rate: float
     depth: float
     base_threshold: float
     level: Optional[float] = None  # None -> starts full (= depth)
+    clock: Optional[Callable[[], float]] = field(default=None, repr=False)
 
     def __post_init__(self) -> None:
         if self.level is None:
             self.level = self.depth
+        self._last_t = self.clock() if self.clock is not None else 0.0
+
+    def _refill(self) -> None:
+        if self.clock is None:
+            self.level = min(self.level + self.rate, self.depth)
+            return
+        now = self.clock()
+        dt = max(now - self._last_t, 0.0)
+        self._last_t = now
+        self.level = min(self.level + self.rate * dt, self.depth)
+
+    def try_take(self) -> bool:
+        """Plain rate-limiter admission: consume a token if one is available.
+        Unlike ``decide`` there is no scarcity threshold — this is the
+        estimate-independent form edge servers use to cap admissions."""
+        self._refill()
+        if self.level >= 1.0:
+            self.level -= 1.0
+            return True
+        return False
 
     def decide(self, estimate: float) -> bool:
-        self.level = min(self.level + self.rate, self.depth)
+        self._refill()
         if self.level < 1.0:
             return False
         # scarcity-adjusted threshold: full bucket -> base threshold,

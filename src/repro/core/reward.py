@@ -129,6 +129,15 @@ class CdfTransform:
         ranks = np.searchsorted(self._sorted, rewards, side="right")
         return ranks / max(self._n, 1)
 
+    def state(self) -> dict:
+        """Serializable fit state — the public checkpoint surface (callers
+        must not reach into ``_sorted``)."""
+        return {"sorted_rewards": self._sorted.copy()}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "CdfTransform":
+        return cls(np.asarray(state["sorted_rewards"], dtype=np.float64))
+
 
 def cascade_map(
     imgs: Sequence[MatchedImage],

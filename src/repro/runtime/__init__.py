@@ -1,0 +1,60 @@
+"""Streaming serve-time API on top of the frozen ``OffloadEngine``.
+
+The engine (repro.api) is the fitted decision artifact; this package is the
+*served system* around it — the paper's deployment setting made explicit:
+
+- :class:`OffloadSession` — stateful per-stream wrapper (micro-batched
+  scoring through the fused Pallas path, arrival-order policy state,
+  rolling telemetry, mid-stream ``set_ratio``),
+- :class:`EdgeWorker` / :class:`EdgeLatencyModel` — a constrained edge
+  server (capacity, clock-driven token-bucket rate limit, latency model),
+- :class:`MultiEdgeDispatcher` — routes accepted offloads across a
+  heterogeneous fleet (``round_robin`` / ``least_loaded`` /
+  ``score_weighted``) with drop-or-degrade on saturation,
+- :class:`OffloadRuntime` / :func:`simulate` — the deterministic seeded
+  end-to-end driver producing exact per-step :class:`StreamTrace` records.
+
+See docs/API.md ("The streaming runtime") for the lifecycle and a migration
+note from direct ``engine.decide()`` loops.
+"""
+from repro.runtime.clock import ManualClock
+from repro.runtime.dispatch import (
+    OUTCOME_DEGRADED,
+    OUTCOME_DROPPED,
+    OUTCOME_LOCAL,
+    OUTCOME_OFFLOADED,
+    DispatchResult,
+    MultiEdgeDispatcher,
+    list_strategies,
+)
+from repro.runtime.edge import CompletedJob, EdgeLatencyModel, EdgeWorker
+from repro.runtime.session import OffloadSession, SessionTelemetry, StepDecision
+from repro.runtime.simulate import (
+    OffloadRuntime,
+    StepRecord,
+    StreamTrace,
+    default_edge_fleet,
+    simulate,
+)
+
+__all__ = [
+    "ManualClock",
+    "OffloadSession",
+    "SessionTelemetry",
+    "StepDecision",
+    "EdgeWorker",
+    "EdgeLatencyModel",
+    "CompletedJob",
+    "MultiEdgeDispatcher",
+    "DispatchResult",
+    "list_strategies",
+    "OUTCOME_LOCAL",
+    "OUTCOME_OFFLOADED",
+    "OUTCOME_DEGRADED",
+    "OUTCOME_DROPPED",
+    "OffloadRuntime",
+    "StepRecord",
+    "StreamTrace",
+    "default_edge_fleet",
+    "simulate",
+]

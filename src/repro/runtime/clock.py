@@ -1,0 +1,24 @@
+"""Deterministic time sources for the streaming runtime.
+
+Nothing in the runtime reads the wall clock: every time-dependent component
+(token-bucket refill, edge service completion) takes either an explicit
+``now`` argument or an injected zero-arg clock callable.  ``ManualClock`` is
+the canonical injectable clock for simulations and tests.
+"""
+from __future__ import annotations
+
+
+class ManualClock:
+    """A hand-advanced monotone clock: ``clock()`` reads, ``advance`` moves."""
+
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock cannot go backwards (dt={dt})")
+        self.t += float(dt)
+        return self.t

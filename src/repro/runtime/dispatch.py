@@ -1,0 +1,147 @@
+"""`MultiEdgeDispatcher` — routes accepted offloads across N heterogeneous
+edges, with drop-or-degrade on saturation.
+
+Strategies (``list_strategies()``):
+
+- ``round_robin``   — rotate through the fleet, take the first that admits,
+- ``least_loaded``  — prefer the lowest in-flight/capacity fraction,
+- ``score_weighted``— seeded sampling of the probe order with weights
+  ``free_slots / expected_latency``, so fast idle edges absorb most traffic
+  while loaded ones still get a share (power-of-choices flavor).
+
+When no edge admits a frame, the saturation policy decides its fate:
+``degrade`` serves the weak result locally (frame is answered, quality
+degrades), ``drop`` discards it.  Both are counted; the per-step outcome is
+recorded on the :class:`DispatchResult` so traces stay exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.runtime.edge import EdgeWorker
+
+_STRATEGIES = ("round_robin", "least_loaded", "score_weighted")
+_ON_SATURATION = ("degrade", "drop")
+
+#: trace outcome labels
+OUTCOME_LOCAL = "local"          # policy kept the frame on the weak device
+OUTCOME_OFFLOADED = "offloaded"  # admitted by an edge
+OUTCOME_DEGRADED = "degraded"    # wanted to offload, fleet saturated -> weak
+OUTCOME_DROPPED = "dropped"      # wanted to offload, fleet saturated -> lost
+
+
+def list_strategies() -> List[str]:
+    """Registered dispatch strategies (for configs and error messages)."""
+    return list(_STRATEGIES)
+
+
+@dataclass(frozen=True)
+class DispatchResult:
+    """Where one accepted offload went (or why it didn't)."""
+
+    step: int
+    estimate: float
+    edge: Optional[str]
+    latency: Optional[float]
+    outcome: str
+
+
+class MultiEdgeDispatcher:
+    def __init__(
+        self,
+        edges: Sequence[EdgeWorker],
+        strategy: str = "least_loaded",
+        *,
+        on_saturation: str = "degrade",
+        seed: int = 0,
+    ):
+        if strategy not in _STRATEGIES:
+            raise KeyError(f"unknown strategy {strategy!r}; have {list_strategies()}")
+        if on_saturation not in _ON_SATURATION:
+            raise KeyError(
+                f"unknown saturation policy {on_saturation!r}; have {list(_ON_SATURATION)}"
+            )
+        self.edges = list(edges)
+        if not self.edges:
+            raise ValueError("dispatcher needs at least one edge")
+        names = [e.name for e in self.edges]
+        if len(set(names)) != len(names):
+            raise ValueError(f"edge names must be unique, got {names}")
+        self.strategy = strategy
+        self.on_saturation = on_saturation
+        self._rr = 0
+        self._rng = np.random.default_rng(seed)
+        self.dropped = 0
+        self.degraded = 0
+
+    # --------------------------------------------------------------- routing
+
+    def poll(self, now: float) -> None:
+        """Advance all edges to ``now``, completing finished offloads."""
+        for e in self.edges:
+            e.poll(now)
+
+    def _probe_order(self, estimate: float) -> List[int]:
+        n = len(self.edges)
+        if self.strategy == "round_robin":
+            start = self._rr
+            self._rr = (self._rr + 1) % n
+            return [(start + i) % n for i in range(n)]
+        if self.strategy == "least_loaded":
+            return sorted(range(n), key=lambda i: (self.edges[i].load, i))
+        # score_weighted: seeded sampling without replacement, weight =
+        # free slots per unit of expected latency
+        w = np.array(
+            [
+                max(e.capacity - e.inflight, 0) / max(e.expected_latency(), 1e-9)
+                for e in self.edges
+            ],
+            dtype=np.float64,
+        )
+        pos = np.flatnonzero(w > 0.0)
+        if pos.size == 0:
+            return list(range(n))
+        order = [
+            int(i)
+            for i in self._rng.choice(
+                pos, size=pos.size, replace=False, p=w[pos] / w[pos].sum()
+            )
+        ]
+        # saturated edges last, in index order (their buckets may still admit
+        # once try_admit polls completions at dispatch time)
+        return order + [i for i in range(n) if w[i] <= 0.0]
+
+    def dispatch(self, now: float, step: int, estimate: float) -> DispatchResult:
+        """Route one accepted offload; on fleet saturation apply the
+        drop-or-degrade policy."""
+        self.poll(now)
+        for i in self._probe_order(estimate):
+            lat = self.edges[i].try_admit(now, step, estimate)
+            if lat is not None:
+                return DispatchResult(
+                    step=step, estimate=estimate, edge=self.edges[i].name,
+                    latency=lat, outcome=OUTCOME_OFFLOADED,
+                )
+        if self.on_saturation == "degrade":
+            self.degraded += 1
+            outcome = OUTCOME_DEGRADED
+        else:
+            self.dropped += 1
+            outcome = OUTCOME_DROPPED
+        return DispatchResult(
+            step=step, estimate=estimate, edge=None, latency=None, outcome=outcome
+        )
+
+    # ----------------------------------------------------------------- stats
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "strategy": self.strategy,
+            "on_saturation": self.on_saturation,
+            "dropped": self.dropped,
+            "degraded": self.degraded,
+            "edges": {e.name: e.stats() for e in self.edges},
+        }

@@ -1,0 +1,169 @@
+"""`EdgeWorker` — one constrained edge server in the serve-time topology.
+
+Models the three resource constraints the paper's deployment setting puts on
+the strong detector's side of the link:
+
+- **capacity**: at most ``capacity`` offloaded frames in flight at once
+  (the edge GPU's concurrency budget),
+- **rate**: a token bucket admitting at most ``rate`` offloads per time
+  unit with burst tolerance ``burst`` — a plain
+  :class:`repro.core.policy.TokenBucket` in its estimate-independent
+  ``try_take`` form, refilled by the simulation clock (injected, never the
+  wall clock),
+- **latency model**: completion time ``base + per_inflight * load`` plus
+  seeded jitter, so heterogeneous edges (fast/near vs big/far) and load-
+  dependent queueing are expressible.
+
+All timekeeping flows through the ``now`` argument of ``poll``/``try_admit``
+— the worker is fully deterministic under a seeded driver.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.policy import TokenBucket
+
+
+@dataclass(frozen=True)
+class EdgeLatencyModel:
+    """Offload completion latency: ``base + per_inflight * inflight`` plus
+    uniform seeded jitter in ``[0, jitter)``."""
+
+    base: float = 1.0
+    per_inflight: float = 0.0
+    jitter: float = 0.0
+
+    def sample(self, inflight: int, rng: np.random.Generator) -> float:
+        lat = self.base + self.per_inflight * inflight
+        if self.jitter > 0.0:
+            lat += self.jitter * float(rng.uniform())
+        return lat
+
+
+@dataclass(frozen=True)
+class CompletedJob:
+    """One finished offload: arrival step, admit/finish times, serving edge."""
+
+    step: int
+    edge: str
+    t_admit: float
+    t_done: float
+
+
+class EdgeWorker:
+    """One edge server with capacity, rate limit, and a latency model.
+
+    Parameters
+    ----------
+    name : str
+        Unique id within a dispatcher fleet.
+    capacity : int
+        Max concurrent in-flight offloads.
+    rate : float or None
+        Admissions per time unit (token bucket, burst ``burst``); ``None``
+        disables rate limiting.
+    burst : float
+        Token-bucket depth (burst tolerance) when ``rate`` is set.
+    latency : EdgeLatencyModel
+    seed : int
+        Seeds the jitter stream; two workers with equal config + seed are
+        step-for-step identical.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        *,
+        capacity: int = 4,
+        rate: Optional[float] = None,
+        burst: float = 4.0,
+        latency: Optional[EdgeLatencyModel] = None,
+        seed: int = 0,
+    ):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.name = str(name)
+        self.capacity = int(capacity)
+        self.latency = latency if latency is not None else EdgeLatencyModel()
+        self._rng = np.random.default_rng(seed)
+        self._now = 0.0
+        # min-heap of (t_done, step, t_admit); admit time rides in the entry
+        # so concurrent sessions may reuse step indices without collisions
+        self._inflight: List[tuple] = []
+        self.completed: List[CompletedJob] = []
+        self.accepted = 0
+        self.rejected = 0
+        self._bucket: Optional[TokenBucket] = (
+            TokenBucket(
+                rate=float(rate),
+                depth=float(burst),
+                base_threshold=0.0,
+                clock=lambda: self._now,
+            )
+            if rate is not None
+            else None
+        )
+
+    # ------------------------------------------------------------------ time
+
+    def _advance(self, now: float) -> None:
+        self._now = max(self._now, float(now))
+
+    def poll(self, now: float) -> List[CompletedJob]:
+        """Complete every in-flight offload with finish time <= ``now``."""
+        self._advance(now)
+        done: List[CompletedJob] = []
+        while self._inflight and self._inflight[0][0] <= self._now:
+            t_done, step, t_admit = heapq.heappop(self._inflight)
+            job = CompletedJob(
+                step=step, edge=self.name, t_admit=t_admit, t_done=t_done,
+            )
+            done.append(job)
+            self.completed.append(job)
+        return done
+
+    # ------------------------------------------------------------- admission
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    @property
+    def load(self) -> float:
+        """Fraction of capacity in use (0 = idle, 1 = saturated)."""
+        return len(self._inflight) / self.capacity
+
+    def expected_latency(self) -> float:
+        """Deterministic part of the next job's latency (dispatch weighting)."""
+        return self.latency.base + self.latency.per_inflight * len(self._inflight)
+
+    def try_admit(self, now: float, step: int, estimate: float) -> Optional[float]:
+        """Admit one offload; returns its latency, or ``None`` when the edge
+        refuses (capacity full, or the rate limiter withholds a token).  The
+        estimate is recorded on the trace, not used for admission."""
+        self.poll(now)
+        if len(self._inflight) >= self.capacity:
+            self.rejected += 1
+            return None
+        if self._bucket is not None and not self._bucket.try_take():
+            self.rejected += 1
+            return None
+        lat = self.latency.sample(len(self._inflight), self._rng)
+        heapq.heappush(self._inflight, (self._now + lat, int(step), self._now))
+        self.accepted += 1
+        return lat
+
+    # ----------------------------------------------------------------- stats
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "capacity": self.capacity,
+            "accepted": self.accepted,
+            "rejected": self.rejected,
+            "completed": len(self.completed),
+            "inflight": len(self._inflight),
+        }

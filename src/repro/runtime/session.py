@@ -1,0 +1,223 @@
+"""`OffloadSession` — the stateful per-stream serve loop over a frozen
+:class:`repro.api.OffloadEngine`.
+
+The engine is the *fitted artifact* (features → estimator → rank transform →
+policy construction recipe); a session is one device's *stream* through it:
+
+- frames arrive one at a time and are buffered into micro-batches so reward
+  scoring runs the engine's batched path (the fused Pallas ``estimator_mlp``
+  kernel for the deployable single-hidden-layer MLP),
+- decisions are taken strictly in arrival order through a session-private
+  policy instance, so stateful policies (``token_bucket``) carry their
+  bucket level across the stream without cross-talk between sessions,
+- rolling telemetry tracks the realized offload ratio and (optionally)
+  realized rewards against the target budget,
+- ``set_ratio`` re-budgets mid-stream without touching the shared engine.
+
+Sessions never mutate the engine: N concurrent streams can serve from one
+loaded artifact.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.api.engine import OffloadEngine
+from repro.api.policies import make_policy
+
+
+@dataclass(frozen=True)
+class StepDecision:
+    """One frame's serve-time decision, in arrival order."""
+
+    step: int
+    estimate: float
+    offload: bool
+
+
+@dataclass(frozen=True)
+class SessionTelemetry:
+    """Snapshot of a session's counters (cumulative + rolling window)."""
+
+    processed: int
+    offloaded: int
+    realized_ratio: float
+    rolling_ratio: float
+    mean_estimate: float
+    target_ratio: float
+    pending: int
+    reward_sum: float
+    rewards_recorded: int
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "processed": self.processed,
+            "offloaded": self.offloaded,
+            "realized_ratio": self.realized_ratio,
+            "rolling_ratio": self.rolling_ratio,
+            "mean_estimate": self.mean_estimate,
+            "target_ratio": self.target_ratio,
+            "pending": self.pending,
+            "reward_sum": self.reward_sum,
+            "rewards_recorded": self.rewards_recorded,
+        }
+
+
+class OffloadSession:
+    """Stateful per-stream wrapper around a fitted ``OffloadEngine``.
+
+    Parameters
+    ----------
+    engine : OffloadEngine
+        Must be fitted (or loaded); the session builds its own policy
+        instance from the engine's calibration scores so per-stream policy
+        state is isolated.
+    ratio : float or None
+        Session-local target offloading ratio; defaults to the engine's.
+    micro_batch : int
+        Frames buffered before one batched scoring call.  1 = score every
+        arrival immediately; larger values trade decision latency for
+        scoring throughput through the fused Pallas path.
+    telemetry_window : int
+        Length of the rolling window behind ``telemetry.rolling_ratio``.
+    clock : callable or None
+        Injected time source forwarded to time-based policies
+        (``token_bucket``); ignored by stateless policies.  Never the wall
+        clock in tests/simulations — see ``repro.runtime.clock.ManualClock``.
+    """
+
+    def __init__(
+        self,
+        engine: OffloadEngine,
+        *,
+        ratio: Optional[float] = None,
+        micro_batch: int = 8,
+        telemetry_window: int = 64,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        if engine.calibration_scores is None:
+            raise RuntimeError("OffloadSession over an unfitted engine")
+        self.engine = engine
+        self.micro_batch = max(int(micro_batch), 1)
+        self._ratio = float(engine.ratio if ratio is None else ratio)
+        kwargs = dict(engine.policy_kwargs)
+        if clock is not None and engine.policy_name == "token_bucket":
+            kwargs["clock"] = clock
+        self.policy = make_policy(
+            engine.policy_name, engine.calibration_scores, self._ratio, **kwargs
+        )
+        self._buffer: List[Any] = []          # pending feature rows
+        self._next_step = 0                   # arrival index of next submit
+        self._window = deque(maxlen=max(int(telemetry_window), 1))
+        self._processed = 0
+        self._offloaded = 0
+        self._estimate_sum = 0.0
+        self._reward_sum = 0.0
+        self._rewards_recorded = 0
+
+    # ------------------------------------------------------------- streaming
+
+    def submit(
+        self, weak_output: Any = None, *, features: Optional[np.ndarray] = None
+    ) -> List[StepDecision]:
+        """Enqueue one frame.  Returns the decisions flushed by this arrival
+        — empty until the micro-batch fills, then ``micro_batch`` decisions
+        in arrival order."""
+        if features is not None:
+            row = np.asarray(features, np.float32)
+            if row.ndim != 1:
+                raise ValueError(
+                    f"submit() takes one frame; features must be 1-D, got {row.shape}"
+                )
+            self._buffer.append(row)
+        else:
+            if weak_output is None:
+                raise ValueError("pass weak_output or features=")
+            row = self.engine.features([weak_output])
+            self._buffer.append(np.asarray(row, np.float32)[0])
+        self._next_step += 1
+        if len(self._buffer) >= self.micro_batch:
+            return self.flush()
+        return []
+
+    def submit_batch(
+        self,
+        weak_outputs: Any = None,
+        *,
+        features: Optional[np.ndarray] = None,
+        flush: bool = True,
+    ) -> List[StepDecision]:
+        """Stream a pre-formed batch through the session in arrival order.
+
+        Feature extraction happens once for the whole batch (adapters like
+        ``lm_logits`` consume batch-shaped weak outputs); scoring still runs
+        per micro-batch and decisions stay sequential.  With ``flush=False``
+        a trailing partial micro-batch stays buffered for the next call."""
+        x = self.engine.features(weak_outputs, features=features)
+        out: List[StepDecision] = []
+        for row in x:
+            out.extend(self.submit(features=row))
+        if flush:
+            out.extend(self.flush())
+        return out
+
+    def flush(self) -> List[StepDecision]:
+        """Score the buffered micro-batch (one fused-kernel call) and decide
+        each frame in arrival order through the session policy."""
+        if not self._buffer:
+            return []
+        x = np.stack(self._buffer)
+        self._buffer = []
+        estimates = np.asarray(self.engine.score(features=x), np.float64).ravel()
+        # the buffer held exactly the arrivals not yet decided, so the flushed
+        # rows are the trailing len(estimates) arrival indices
+        first = self._next_step - len(estimates)
+        out: List[StepDecision] = []
+        for i, est in enumerate(estimates):
+            offload = bool(self.policy.decide(float(est)))
+            self._processed += 1
+            self._offloaded += int(offload)
+            self._estimate_sum += float(est)
+            self._window.append(offload)
+            out.append(
+                StepDecision(step=first + i, estimate=float(est), offload=offload)
+            )
+        return out
+
+    # --------------------------------------------------------------- control
+
+    def set_ratio(self, ratio: float) -> None:
+        """Mid-stream budget change — affects only this session's policy."""
+        self._ratio = float(ratio)
+        self.policy.set_ratio(self._ratio)
+
+    @property
+    def ratio(self) -> float:
+        return self._ratio
+
+    def record_reward(self, reward: float) -> None:
+        """Account a realized per-frame reward (e.g. observed quality delta)
+        into the session telemetry."""
+        self._reward_sum += float(reward)
+        self._rewards_recorded += 1
+
+    # ------------------------------------------------------------- telemetry
+
+    @property
+    def telemetry(self) -> SessionTelemetry:
+        n = self._processed
+        roll = list(self._window)
+        return SessionTelemetry(
+            processed=n,
+            offloaded=self._offloaded,
+            realized_ratio=self._offloaded / n if n else 0.0,
+            rolling_ratio=float(np.mean(roll)) if roll else 0.0,
+            mean_estimate=self._estimate_sum / n if n else 0.0,
+            target_ratio=self._ratio,
+            pending=len(self._buffer),
+            reward_sum=self._reward_sum,
+            rewards_recorded=self._rewards_recorded,
+        )

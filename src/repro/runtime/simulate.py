@@ -1,0 +1,246 @@
+"""`OffloadRuntime` + the seeded `simulate()` driver.
+
+The runtime is the top-level serve-time object: one frozen
+:class:`repro.api.OffloadEngine` artifact, a fleet of
+:class:`~repro.runtime.edge.EdgeWorker`, and a
+:class:`~repro.runtime.dispatch.MultiEdgeDispatcher` strategy.  Sessions
+opened from it decide in arrival order; frames the policy offloads are
+routed across the fleet; saturation degrades (or drops) them.
+
+``simulate`` is the deterministic end-to-end driver of the paper's
+deployment picture — one weak embedded device emitting a stream of frames
+toward N constrained edges — producing an exact per-step
+:class:`StreamTrace`.  Everything is seeded and clocked manually, so two
+runs with the same inputs are identical record-for-record.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.api.engine import OffloadEngine
+from repro.runtime.clock import ManualClock
+from repro.runtime.dispatch import (
+    OUTCOME_LOCAL,
+    OUTCOME_OFFLOADED,
+    DispatchResult,
+    MultiEdgeDispatcher,
+)
+from repro.runtime.edge import EdgeLatencyModel, EdgeWorker
+from repro.runtime.session import OffloadSession, SessionTelemetry, StepDecision
+
+
+@dataclass(frozen=True)
+class StepRecord:
+    """One frame's full serve-time story, in arrival order."""
+
+    step: int
+    t_arrival: float
+    t_decision: float
+    estimate: float
+    offload: bool
+    edge: Optional[str]
+    latency: Optional[float]
+    outcome: str
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "step": self.step,
+            "t_arrival": self.t_arrival,
+            "t_decision": self.t_decision,
+            "estimate": self.estimate,
+            "offload": self.offload,
+            "edge": self.edge,
+            "latency": self.latency,
+            "outcome": self.outcome,
+        }
+
+
+@dataclass
+class StreamTrace:
+    """Per-step records + end-of-stream telemetry and dispatcher stats."""
+
+    records: List[StepRecord]
+    telemetry: SessionTelemetry
+    dispatcher: Dict[str, Any]
+
+    def outcome_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for r in self.records:
+            counts[r.outcome] = counts.get(r.outcome, 0) + 1
+        return counts
+
+    def offload_mask(self) -> np.ndarray:
+        """Frames actually served by an edge, in arrival order (degraded and
+        dropped frames are False — they never reached the strong model)."""
+        return np.array([r.outcome == OUTCOME_OFFLOADED for r in self.records])
+
+    def summary(self) -> Dict[str, Any]:
+        lats = [r.latency for r in self.records if r.latency is not None]
+        return {
+            "steps": len(self.records),
+            "outcomes": self.outcome_counts(),
+            "telemetry": self.telemetry.as_dict(),
+            "dispatcher": self.dispatcher,
+            "mean_offload_latency": float(np.mean(lats)) if lats else None,
+        }
+
+
+def default_edge_fleet(n: int = 3, seed: int = 0) -> List[EdgeWorker]:
+    """A seeded heterogeneous fleet: a fast/small edge, then progressively
+    bigger, slower, more rate-limited ones (cycled past n=3)."""
+    profiles = [
+        dict(capacity=2, rate=0.5, burst=2.0,
+             latency=EdgeLatencyModel(base=0.5, per_inflight=0.1, jitter=0.05)),
+        dict(capacity=4, rate=0.35, burst=4.0,
+             latency=EdgeLatencyModel(base=1.0, per_inflight=0.2, jitter=0.1)),
+        dict(capacity=8, rate=0.25, burst=8.0,
+             latency=EdgeLatencyModel(base=2.0, per_inflight=0.1, jitter=0.1)),
+    ]
+    return [
+        EdgeWorker(f"edge{i}", seed=seed + i, **profiles[i % len(profiles)])
+        for i in range(n)
+    ]
+
+
+class OffloadRuntime:
+    """The served system: engine artifact + edge fleet + dispatch strategy."""
+
+    def __init__(
+        self,
+        engine: OffloadEngine,
+        edges: Sequence[EdgeWorker],
+        *,
+        strategy: str = "least_loaded",
+        on_saturation: str = "degrade",
+        seed: int = 0,
+    ):
+        self.engine = engine
+        self.dispatcher = MultiEdgeDispatcher(
+            edges, strategy, on_saturation=on_saturation, seed=seed
+        )
+        self.clock = ManualClock()
+
+    def open_session(
+        self,
+        *,
+        ratio: Optional[float] = None,
+        micro_batch: int = 8,
+        telemetry_window: int = 64,
+    ) -> OffloadSession:
+        """A new per-stream session sharing the frozen engine; time-based
+        policies see the runtime's manual clock."""
+        return OffloadSession(
+            self.engine,
+            ratio=ratio,
+            micro_batch=micro_batch,
+            telemetry_window=telemetry_window,
+            clock=self.clock,
+        )
+
+    # ------------------------------------------------------------- streaming
+
+    def serve(
+        self,
+        weak_outputs: Any = None,
+        *,
+        features: Optional[np.ndarray] = None,
+        ratio: Optional[float] = None,
+        micro_batch: int = 8,
+        arrival_period: float = 1.0,
+        set_ratio_at: Optional[Dict[int, float]] = None,
+    ) -> StreamTrace:
+        """Serve one finite stream end to end and return its exact trace.
+
+        Frames arrive every ``arrival_period`` time units; decisions come
+        out micro-batched (decision time = flush time); accepted offloads
+        are dispatched immediately.  ``set_ratio_at`` maps arrival step ->
+        new target ratio, applied before that frame is submitted (mid-stream
+        re-budgeting, paper Table I); the pending micro-batch is flushed
+        first so earlier arrivals are never re-budgeted retroactively."""
+        x = self.engine.features(weak_outputs, features=features)
+        session = self.open_session(ratio=ratio, micro_batch=micro_batch)
+        rebudget = dict(set_ratio_at or {})
+        t_arrival: Dict[int, float] = {}
+        records: List[StepRecord] = []
+
+        def settle(decisions: List[StepDecision]) -> None:
+            now = self.clock()
+            for d in decisions:
+                if not d.offload:
+                    records.append(
+                        StepRecord(
+                            step=d.step, t_arrival=t_arrival[d.step],
+                            t_decision=now, estimate=d.estimate, offload=False,
+                            edge=None, latency=None, outcome=OUTCOME_LOCAL,
+                        )
+                    )
+                    continue
+                res: DispatchResult = self.dispatcher.dispatch(
+                    now, d.step, d.estimate
+                )
+                records.append(
+                    StepRecord(
+                        step=d.step, t_arrival=t_arrival[d.step], t_decision=now,
+                        estimate=d.estimate, offload=True, edge=res.edge,
+                        latency=res.latency, outcome=res.outcome,
+                    )
+                )
+
+        for step, row in enumerate(x):
+            if step in rebudget:
+                settle(session.flush())  # decide earlier arrivals at the old budget
+                session.set_ratio(rebudget[step])
+            t_arrival[step] = self.clock()
+            settle(session.submit(features=row))
+            self.clock.advance(arrival_period)
+        settle(session.flush())
+
+        # drain: run the clock past the last in-flight completion
+        horizon = max(
+            [r.t_decision + r.latency for r in records if r.latency is not None],
+            default=self.clock(),
+        )
+        self.clock.advance(max(horizon - self.clock(), 0.0) + 1e-9)
+        self.dispatcher.poll(self.clock())
+
+        records.sort(key=lambda r: r.step)
+        return StreamTrace(
+            records=records,
+            telemetry=session.telemetry,
+            dispatcher=self.dispatcher.stats(),
+        )
+
+
+def simulate(
+    engine: OffloadEngine,
+    weak_outputs: Any = None,
+    *,
+    features: Optional[np.ndarray] = None,
+    edges: Optional[Sequence[EdgeWorker]] = None,
+    n_edges: int = 3,
+    strategy: str = "least_loaded",
+    on_saturation: str = "degrade",
+    ratio: Optional[float] = None,
+    micro_batch: int = 8,
+    arrival_period: float = 1.0,
+    set_ratio_at: Optional[Dict[int, float]] = None,
+    seed: int = 0,
+) -> StreamTrace:
+    """One-call deterministic streaming simulation: 1 weak device emitting
+    the given frames toward ``n_edges`` heterogeneous edges (or an explicit
+    ``edges`` fleet), decisions via a session over ``engine``."""
+    fleet = list(edges) if edges is not None else default_edge_fleet(n_edges, seed)
+    runtime = OffloadRuntime(
+        engine, fleet, strategy=strategy, on_saturation=on_saturation, seed=seed
+    )
+    return runtime.serve(
+        weak_outputs,
+        features=features,
+        ratio=ratio,
+        micro_batch=micro_batch,
+        arrival_period=arrival_period,
+        set_ratio_at=set_ratio_at,
+    )

@@ -164,6 +164,67 @@ class LMCascade:
             "offload_ratio": decision.ratio,
         }
 
+    def serve_stream(
+        self,
+        params: PyTree,
+        batches,
+        *,
+        micro_batch: int = 8,
+        ratio: "float | None" = None,
+        session=None,
+        set_ratio_at: "Dict[int, float] | None" = None,
+    ) -> Dict:
+        """Streaming serve: requests arrive batch by batch and flow through
+        one :class:`repro.runtime.OffloadSession` in arrival order — the
+        stateful counterpart of ``serve_batch`` (policy state, realized-ratio
+        telemetry, and mid-stream ``set_ratio_at`` re-budgets carry across
+        batches).  Realized rewards (NLL_weak − NLL_strong of each request
+        that actually went to the strong model) are recorded into the
+        session telemetry, so ``reward_sum / rewards_recorded`` is the mean
+        realized quality delta of the offloaded traffic.
+
+        ``set_ratio_at`` maps global request index -> new target ratio.
+        Returns concatenated per-request results plus the telemetry."""
+        from repro.runtime.session import OffloadSession
+
+        if session is None:
+            session = OffloadSession(self.engine, ratio=ratio, micro_batch=micro_batch)
+        rebudget = dict(set_ratio_at or {})
+        wcfg = truncated_config(self.cfg, self.exit_layer)
+        wparams = truncate_params(params, self.cfg, self.exit_layer)
+        served = 0
+        est, off, nw, ns = [], [], [], []
+        for batch in batches:
+            # re-budgets land at the nearest batch boundary, in step order
+            for step in sorted(rebudget):
+                if step < served + int(batch["tokens"].shape[0]):
+                    session.set_ratio(rebudget.pop(step))
+            wlogits, _ = forward(wparams, wcfg, batch)
+            decisions = session.submit_batch((wlogits, batch["labels"]))
+            mask = np.array([d.offload for d in decisions], bool)
+            nll_w = np.asarray(sequence_nll(wlogits, batch["labels"]))
+            slogits, _ = forward(params, self.cfg, batch)
+            nll_s = np.asarray(sequence_nll(slogits, batch["labels"]))
+            for r in (nll_w - nll_s)[mask]:
+                session.record_reward(float(r))
+            est.append(np.array([d.estimate for d in decisions]))
+            off.append(mask)
+            nw.append(nll_w)
+            ns.append(nll_s)
+            served += len(mask)
+        offload = np.concatenate(off) if off else np.zeros(0, bool)
+        nll_w = np.concatenate(nw) if nw else np.zeros(0)
+        nll_s = np.concatenate(ns) if ns else np.zeros(0)
+        return {
+            "estimates": np.concatenate(est) if est else np.zeros(0),
+            "offload": offload,
+            "nll_weak": nll_w,
+            "nll_strong": nll_s,
+            "nll_final": np.where(offload, nll_s, nll_w),
+            "offload_ratio": float(offload.mean()) if offload.size else 0.0,
+            "telemetry": session.telemetry.as_dict(),
+        }
+
     def set_ratio(self, ratio: float) -> None:
         """Runtime offload-budget adjustment (delegates to the engine)."""
         self.engine.set_ratio(ratio)

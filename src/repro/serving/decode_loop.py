@@ -55,34 +55,48 @@ def cascade_generate(
     batch: Dict,
     steps: int,
     *,
-    engine,
+    engine=None,
+    session=None,
     exit_layer: int,
+    micro_batch: int = 8,
     capacity: Optional[int] = None,
     greedy: bool = True,
     key=None,
 ) -> Dict:
-    """Engine-gated decode: every request decodes through the early-exit
-    (weak) stack; rows the ``OffloadEngine`` offloads decode at full depth
+    """Session-gated decode: every request decodes through the early-exit
+    (weak) stack; rows the ``OffloadSession`` offloads decode at full depth
     instead.  The decision reads only the weak prompt logits — the same
     deployability constraint as the detection cascade.
 
-    ``batch`` values must share the leading batch dimension (dense/rwkv/moe
-    stacks).  Returns generated tokens plus the decision trace.
+    Requests flow through a stream session in arrival (row) order, so
+    stateful policies (``token_bucket``) carry across calls when the caller
+    passes a long-lived ``session``; passing just ``engine`` opens a
+    throwaway session for this batch.  ``batch`` values must share the
+    leading batch dimension (dense/rwkv/moe stacks).  Returns generated
+    tokens plus the decision trace and session telemetry.
     """
+    from repro.runtime.session import OffloadSession
     from repro.serving.cascade_serving import truncate_params, truncated_config
+
+    if session is None:
+        if engine is None:
+            raise ValueError("pass engine= or session=")
+        session = OffloadSession(engine, micro_batch=micro_batch)
 
     wcfg = truncated_config(cfg, exit_layer)
     wparams = truncate_params(params, cfg, exit_layer)
     wlogits, _ = forward(wparams, wcfg, batch)
-    decision = engine.decide((wlogits, batch.get("labels")))
+    decisions = session.submit_batch((wlogits, batch.get("labels")))
+    offload = np.array([d.offload for d in decisions], bool)
+    estimates = np.array([d.estimate for d in decisions])
 
     # decisions are known before decoding (they read only prompt logits), so
     # each row decodes through exactly one stack
     B = int(np.shape(batch["tokens"])[0])
     out = np.zeros((B, steps), dtype=np.int32)
     for p, c, idx in (
-        (wparams, wcfg, np.where(~decision.offload)[0]),
-        (params, cfg, np.where(decision.offload)[0]),
+        (wparams, wcfg, np.where(~offload)[0]),
+        (params, cfg, np.where(offload)[0]),
     ):
         if idx.size:
             sub = {k: jnp.asarray(v)[idx] for k, v in batch.items()}
@@ -92,7 +106,8 @@ def cascade_generate(
             out[idx] = np.asarray(toks)
     return {
         "tokens": out,
-        "offload": decision.offload,
-        "estimates": decision.estimates,
-        "offload_ratio": decision.ratio,
+        "offload": offload,
+        "estimates": estimates,
+        "offload_ratio": float(offload.mean()) if offload.size else 0.0,
+        "telemetry": session.telemetry.as_dict(),
     }

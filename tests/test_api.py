@@ -280,6 +280,75 @@ def test_lm_cascade_save_load(tmp_path):
     np.testing.assert_allclose(a["estimates"], b["estimates"], atol=1e-6)
 
 
+def test_cdf_transform_state_roundtrip(rng):
+    from repro.core import CdfTransform
+
+    rewards = rng.normal(0, 1, 200)
+    cdf = CdfTransform(rewards)
+    clone = CdfTransform.from_state(cdf.state())
+    probe = rng.normal(0, 2, 64)
+    np.testing.assert_array_equal(cdf(probe), clone(probe))
+    # mutating the exported state must not alias the fitted transform
+    state = cdf.state()
+    state["sorted_rewards"][:] = 0.0
+    np.testing.assert_array_equal(cdf(probe), clone(probe))
+
+
+def test_registry_listings_exported():
+    """Satellite: repro.api enumerates its registries for configs/errors."""
+    from repro.api import list_feature_extractors, list_policies
+
+    assert set(list_policies()) >= {"threshold", "topk", "token_bucket"}
+    assert set(list_feature_extractors()) >= {"detection_boxes", "lm_logits"}
+    with pytest.raises(KeyError) as ei:
+        make_policy("bogus", np.zeros(4), 0.2)
+    for name in list_policies():
+        assert name in str(ei.value)
+
+
+def test_lm_cascade_serve_stream(tmp_path):
+    """Streaming serve over an OffloadSession: same decisions as the batch
+    path for the stateless threshold policy, plus telemetry across batches."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data.lm_synth import synth_lm_batch
+    from repro.models.lm import init_params, reduced
+    from repro.serving.cascade_serving import LMCascade
+
+    cfg = reduced(get_config("yi_6b"), num_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def mk(seed):
+        toks, labels = synth_lm_batch(np.random.default_rng(seed), 8, 16, cfg.vocab_size)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+    cascade = LMCascade.fit(
+        params, cfg, exit_layer=1, calib_batches=[mk(1)], ratio=0.4, epochs=3
+    )
+    batches = [mk(s) for s in (5, 6, 7)]
+    out = cascade.serve_stream(params, batches, micro_batch=8)
+    assert out["offload"].shape == (24,)
+    want = np.concatenate(
+        [cascade.serve_batch(params, b)["offload"] for b in batches]
+    )
+    np.testing.assert_array_equal(out["offload"], want)
+    t = out["telemetry"]
+    assert t["processed"] == 24
+    # realized rewards are recorded only for requests the strong model served
+    assert t["rewards_recorded"] == int(out["offload"].sum())
+    assert t["realized_ratio"] == pytest.approx(out["offload"].mean())
+    np.testing.assert_allclose(
+        out["nll_final"], np.where(out["offload"], out["nll_strong"], out["nll_weak"])
+    )
+    # mid-stream re-budget to zero: later batches stop offloading
+    out2 = cascade.serve_stream(
+        params, batches, micro_batch=8, set_ratio_at={8: 0.0}
+    )
+    assert not out2["offload"][8:].any()
+
+
 def test_cascade_generate_routes_by_engine():
     """Engine-gated decode: offloaded rows get full-depth tokens."""
     import jax

@@ -1,0 +1,441 @@
+"""The streaming runtime: sessions over a frozen engine, edge workers,
+multi-edge dispatch, and the seeded end-to-end simulation."""
+import numpy as np
+import pytest
+
+from repro.api import MLPRewardModel, OffloadEngine, list_policies
+from repro.core import EstimatorConfig
+from repro.core.policy import TokenBucket
+from repro.runtime import (
+    OUTCOME_DEGRADED,
+    OUTCOME_DROPPED,
+    OUTCOME_LOCAL,
+    OUTCOME_OFFLOADED,
+    EdgeLatencyModel,
+    EdgeWorker,
+    ManualClock,
+    MultiEdgeDispatcher,
+    OffloadRuntime,
+    OffloadSession,
+    default_edge_fleet,
+    list_strategies,
+    simulate,
+)
+
+
+def synth(n=256, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    rewards = 2.0 * x[:, 0] + 0.3 * rng.normal(size=n)
+    return x, rewards
+
+
+def fit_engine(policy="threshold", ratio=0.3, **policy_kwargs):
+    x, rewards = synth()
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(16,), epochs=15, batch_size=64)
+        ),
+        policy=policy,
+        ratio=ratio,
+        policy_kwargs=policy_kwargs,
+    )
+    eng.fit(features=x, rewards=rewards)
+    return eng, x
+
+
+@pytest.fixture(scope="module")
+def threshold_engine():
+    return fit_engine()
+
+
+# --------------------------------------------------------------- sessions
+
+
+def test_session_matches_batch_decide(threshold_engine):
+    """A threshold session is arrival-order invariant: per-item streaming
+    decisions equal the engine's one-shot batch mask under any order."""
+    eng, x = threshold_engine
+    batch_mask = eng.decide(features=x[:64]).offload
+    for perm_seed in (0, 1):
+        order = np.random.default_rng(perm_seed).permutation(64)
+        session = OffloadSession(eng, micro_batch=8)
+        decisions = session.submit_batch(features=x[:64][order])
+        stream_mask = np.array([d.offload for d in decisions])
+        np.testing.assert_array_equal(stream_mask, batch_mask[order])
+
+
+def test_session_micro_batch_size_invariance(threshold_engine):
+    eng, x = threshold_engine
+    masks = []
+    for mb in (1, 7, 64):
+        session = OffloadSession(eng, micro_batch=mb)
+        decisions = session.submit_batch(features=x[:60])
+        assert [d.step for d in decisions] == list(range(60))
+        masks.append([d.offload for d in decisions])
+    assert masks[0] == masks[1] == masks[2]
+
+
+def test_token_bucket_session_order_dependent_but_rate_bound():
+    """token_bucket decisions depend on arrival order (the bucket is
+    stateful) yet the hard rate constraint holds under every order."""
+    eng, x = fit_engine(policy="token_bucket", ratio=0.2, depth=4.0)
+    masks = []
+    for perm_seed in (0, 1, 2):
+        order = np.random.default_rng(perm_seed).permutation(len(x))
+        session = OffloadSession(eng, micro_batch=16)
+        decisions = session.submit_batch(features=x[order])
+        mask = np.array([d.offload for d in decisions])
+        assert mask.mean() <= 0.2 + 4.0 / len(x) + 1e-9
+        masks.append(mask)
+    assert any(not np.array_equal(masks[0], m) for m in masks[1:])
+
+
+def test_sessions_isolate_policy_state():
+    """Two sessions over one engine must not share bucket state."""
+    eng, x = fit_engine(policy="token_bucket", ratio=0.1, depth=2.0)
+    a = OffloadSession(eng, micro_batch=4)
+    b = OffloadSession(eng, micro_batch=4)
+    ma = [d.offload for d in a.submit_batch(features=x[:32])]
+    mb = [d.offload for d in b.submit_batch(features=x[:32])]
+    assert ma == mb  # identical streams -> identical decisions
+    assert eng.policy.bucket.level == eng.policy.depth  # engine untouched
+
+
+def test_midstream_set_ratio(threshold_engine):
+    eng, x = threshold_engine
+    session = OffloadSession(eng, ratio=0.0, micro_batch=8)
+    first = session.submit_batch(features=x[:80])
+    assert not any(d.offload for d in first)
+    session.set_ratio(1.0)
+    assert session.telemetry.target_ratio == 1.0
+    second = session.submit_batch(features=x[80:160])
+    assert all(d.offload for d in second)
+    # engine's own budget is untouched by session-local re-budgets
+    assert eng.ratio == 0.3 and eng.policy.ratio == 0.3
+    t = session.telemetry
+    assert t.processed == 160 and t.offloaded == 80
+    assert t.realized_ratio == pytest.approx(0.5)
+    assert t.rolling_ratio == 1.0  # the 64-frame window saw only offloads
+
+
+def test_session_telemetry_rewards(threshold_engine):
+    eng, x = threshold_engine
+    session = OffloadSession(eng, micro_batch=4)
+    session.submit_batch(features=x[:8])
+    for r in (0.5, -0.25):
+        session.record_reward(r)
+    t = session.telemetry
+    assert t.rewards_recorded == 2 and t.reward_sum == pytest.approx(0.25)
+
+
+def test_session_requires_fitted_engine():
+    with pytest.raises(RuntimeError):
+        OffloadSession(OffloadEngine())
+
+
+def test_engine_save_load_resume_session(threshold_engine, tmp_path):
+    """save -> load -> a session over the loaded engine continues the stream
+    with decisions identical to the original artifact's."""
+    eng, x = threshold_engine
+    path = str(tmp_path / "engine")
+    eng.save(path)
+    loaded = OffloadEngine.load(path)
+    s1 = OffloadSession(eng, micro_batch=8)
+    s2 = OffloadSession(loaded, micro_batch=8)
+    for lo, hi in ((0, 40), (40, 100), (100, 180)):
+        d1 = s1.submit_batch(features=x[lo:hi])
+        d2 = s2.submit_batch(features=x[lo:hi])
+        assert [d.offload for d in d1] == [d.offload for d in d2]
+        np.testing.assert_allclose(
+            [d.estimate for d in d1], [d.estimate for d in d2], atol=1e-6
+        )
+    assert s1.telemetry.as_dict() == s2.telemetry.as_dict()
+
+
+# ------------------------------------------------------- token-bucket clock
+
+
+def test_token_bucket_injectable_clock_refill():
+    clock = ManualClock()
+    tb = TokenBucket(rate=1.0, depth=4.0, base_threshold=0.0, clock=clock)
+    # drain the bucket; frozen time -> no refill between takes
+    for _ in range(4):
+        assert tb.try_take()
+    assert not tb.try_take()
+    assert not tb.decide(0.9)  # still frozen, still empty
+    clock.advance(2.0)  # 2 time units -> 2 tokens
+    assert tb.level < 1.0
+    assert tb.decide(0.99)  # thresholded spend still works under the clock
+    assert tb.level == pytest.approx(1.0)
+
+
+def test_token_bucket_clock_determinism():
+    def run():
+        clock = ManualClock()
+        tb = TokenBucket(rate=0.5, depth=3.0, base_threshold=0.2, clock=clock)
+        out = []
+        for i in range(40):
+            out.append(tb.decide(0.3 + 0.6 * ((i * 7) % 10) / 10))
+            clock.advance(1.0)
+        return out
+
+    assert run() == run()
+
+
+def test_manual_clock_monotone():
+    clock = ManualClock(5.0)
+    assert clock() == 5.0
+    clock.advance(1.5)
+    assert clock() == 6.5
+    with pytest.raises(ValueError):
+        clock.advance(-1.0)
+
+
+# ------------------------------------------------------------ edge workers
+
+
+def test_edge_worker_capacity_and_completion():
+    e = EdgeWorker("e0", capacity=2, latency=EdgeLatencyModel(base=1.0))
+    assert e.try_admit(0.0, 0, 0.9) == pytest.approx(1.0)
+    assert e.try_admit(0.0, 1, 0.9) == pytest.approx(1.0)
+    assert e.try_admit(0.0, 2, 0.9) is None  # capacity full
+    assert e.stats()["rejected"] == 1
+    done = e.poll(1.0)
+    assert sorted(j.step for j in done) == [0, 1]
+    assert e.try_admit(1.0, 3, 0.9) is not None  # slots freed
+
+
+def test_edge_worker_rate_limit_uses_sim_time():
+    e = EdgeWorker(
+        "e0", capacity=16, rate=1.0, burst=2.0, latency=EdgeLatencyModel(base=0.1)
+    )
+    # burst of 2 admits at t=0, then the bucket is dry until time advances
+    assert e.try_admit(0.0, 0, 0.9) is not None
+    assert e.try_admit(0.0, 1, 0.9) is not None
+    assert e.try_admit(0.0, 2, 0.9) is None
+    assert e.try_admit(2.0, 3, 0.9) is not None  # refilled by dt=2
+
+
+def test_edge_worker_load_dependent_latency():
+    e = EdgeWorker(
+        "e0", capacity=4, latency=EdgeLatencyModel(base=1.0, per_inflight=0.5)
+    )
+    lat0 = e.try_admit(0.0, 0, 0.9)
+    lat1 = e.try_admit(0.0, 1, 0.9)
+    assert lat1 == pytest.approx(lat0 + 0.5)
+
+
+# -------------------------------------------------------------- dispatcher
+
+
+def tiny_fleet(capacity=1, **kw):
+    return [
+        EdgeWorker(f"e{i}", capacity=capacity, latency=EdgeLatencyModel(base=100.0), **kw)
+        for i in range(2)
+    ]
+
+
+def test_dispatcher_validates_config():
+    with pytest.raises(KeyError) as ei:
+        MultiEdgeDispatcher(tiny_fleet(), "no_such_strategy")
+    assert "round_robin" in str(ei.value)  # error enumerates the registry
+    with pytest.raises(KeyError):
+        MultiEdgeDispatcher(tiny_fleet(), on_saturation="explode")
+    with pytest.raises(ValueError):
+        MultiEdgeDispatcher([])
+    with pytest.raises(ValueError):
+        MultiEdgeDispatcher([EdgeWorker("same"), EdgeWorker("same")])
+    assert list_strategies() == ["round_robin", "least_loaded", "score_weighted"]
+
+
+@pytest.mark.parametrize("on_saturation,outcome", [
+    ("degrade", OUTCOME_DEGRADED), ("drop", OUTCOME_DROPPED),
+])
+def test_dispatcher_saturation_accounting(on_saturation, outcome):
+    """Slow 1-slot edges: 2 admits, everything after is degraded/dropped,
+    and the books balance exactly."""
+    disp = MultiEdgeDispatcher(
+        tiny_fleet(), "least_loaded", on_saturation=on_saturation
+    )
+    results = [disp.dispatch(0.0, step, 0.9) for step in range(10)]
+    offloaded = [r for r in results if r.outcome == OUTCOME_OFFLOADED]
+    saturated = [r for r in results if r.outcome == outcome]
+    assert len(offloaded) == 2 and len(saturated) == 8
+    stats = disp.stats()
+    assert stats["dropped" if on_saturation == "drop" else "degraded"] == 8
+    assert sum(e["accepted"] for e in stats["edges"].values()) == 2
+    # every saturated frame probed (and was rejected by) both edges
+    assert sum(e["rejected"] for e in stats["edges"].values()) == 16
+
+
+def test_dispatcher_round_robin_spreads_evenly():
+    edges = [
+        EdgeWorker(f"e{i}", capacity=100, latency=EdgeLatencyModel(base=0.1))
+        for i in range(3)
+    ]
+    disp = MultiEdgeDispatcher(edges, "round_robin")
+    t = 0.0
+    for step in range(30):
+        disp.dispatch(t, step, 0.9)
+        t += 1.0
+    assert [e.accepted for e in edges] == [10, 10, 10]
+
+
+def test_dispatcher_least_loaded_prefers_idle():
+    slow = EdgeWorker("slow", capacity=4, latency=EdgeLatencyModel(base=1000.0))
+    idle = EdgeWorker("idle", capacity=4, latency=EdgeLatencyModel(base=1000.0))
+    disp = MultiEdgeDispatcher([slow, idle], "least_loaded")
+    disp.dispatch(0.0, 0, 0.9)  # tie -> first edge
+    r = disp.dispatch(0.0, 1, 0.9)
+    assert r.edge == "idle"  # now slow has load, idle wins
+
+
+def test_dispatcher_score_weighted_handles_saturated_edges():
+    """Regression: zero-weight (full) edges must not break the seeded
+    sampling — they are probed last instead."""
+    disp = MultiEdgeDispatcher(tiny_fleet(), "score_weighted", seed=0)
+    results = [disp.dispatch(0.0, step, 0.9) for step in range(6)]
+    assert sum(r.outcome == OUTCOME_OFFLOADED for r in results) == 2
+    assert sum(r.outcome == OUTCOME_DEGRADED for r in results) == 4
+
+
+def test_dispatcher_score_weighted_deterministic():
+    def run():
+        edges = [
+            EdgeWorker(f"e{i}", capacity=3, latency=EdgeLatencyModel(base=1.0 + i))
+            for i in range(3)
+        ]
+        disp = MultiEdgeDispatcher(edges, "score_weighted", seed=11)
+        out = []
+        t = 0.0
+        for step in range(24):
+            out.append(disp.dispatch(t, step, 0.9).edge)
+            t += 0.5
+        return out
+
+    assert run() == run()
+
+
+# -------------------------------------------------------------- simulation
+
+
+def test_simulate_trace_exactly_reproducible(threshold_engine):
+    eng, x = threshold_engine
+
+    def run():
+        return simulate(
+            eng, features=x, n_edges=3, ratio=0.4, micro_batch=8,
+            set_ratio_at={128: 0.1}, seed=7,
+        )
+
+    t1, t2 = run(), run()
+    assert t1.records == t2.records
+    assert t1.summary() == t2.summary()
+
+
+def test_simulate_end_to_end_multi_edge(threshold_engine):
+    """The acceptance scenario: 1 weak device -> 3 heterogeneous edges."""
+    eng, x = threshold_engine
+    trace = simulate(eng, features=x, n_edges=3, ratio=0.3, micro_batch=8, seed=0)
+    assert len(trace.records) == len(x)
+    assert [r.step for r in trace.records] == list(range(len(x)))
+    counts = trace.outcome_counts()
+    assert sum(counts.values()) == len(x)
+    valid = {OUTCOME_LOCAL, OUTCOME_OFFLOADED, OUTCOME_DEGRADED, OUTCOME_DROPPED}
+    assert set(counts) <= valid
+    assert counts.get(OUTCOME_OFFLOADED, 0) > 0
+    # decision ratio tracks the budget; the served mask can only be smaller
+    assert abs(trace.telemetry.realized_ratio - 0.3) < 0.07
+    assert trace.offload_mask().mean() <= trace.telemetry.realized_ratio
+    # per-edge accounting matches the trace
+    served = {n: 0 for n in trace.dispatcher["edges"]}
+    for r in trace.records:
+        if r.outcome == OUTCOME_OFFLOADED:
+            served[r.edge] += 1
+    for name, st in trace.dispatcher["edges"].items():
+        assert st["accepted"] == served[name]
+        assert st["completed"] == st["accepted"]  # drained at end of stream
+        assert st["inflight"] == 0
+    # arrival clock: one frame per period
+    assert [r.t_arrival for r in trace.records] == [float(i) for i in range(len(x))]
+
+
+def test_simulate_mid_stream_rebudget(threshold_engine):
+    eng, x = threshold_engine
+    trace = simulate(
+        eng, features=x, ratio=0.0, micro_batch=4, set_ratio_at={128: 1.0}, seed=0
+    )
+    first, second = trace.records[:128], trace.records[128:]
+    assert not any(r.offload for r in first)
+    assert all(r.offload for r in second)
+
+
+def test_simulate_rebudget_not_retroactive(threshold_engine):
+    """A rebudget at a non-boundary step flushes the pending micro-batch
+    first: arrivals before the step keep the old budget."""
+    eng, x = threshold_engine
+    trace = simulate(
+        eng, features=x[:32], ratio=1.0, micro_batch=8,
+        set_ratio_at={13: 0.0}, seed=0,
+    )
+    assert all(r.offload for r in trace.records[:13])
+    assert not any(r.offload for r in trace.records[13:])
+
+
+def test_edge_worker_tolerates_duplicate_step_ids():
+    """Concurrent sessions reuse step indices; one edge must keep each
+    admission's own admit time and complete both jobs."""
+    e = EdgeWorker("e0", capacity=4, latency=EdgeLatencyModel(base=1.0))
+    assert e.try_admit(0.0, 0, 0.9) is not None
+    assert e.try_admit(0.5, 0, 0.8) is not None  # same step, other session
+    done = e.poll(2.0)
+    assert [j.t_admit for j in sorted(done, key=lambda j: j.t_done)] == [0.0, 0.5]
+    assert e.stats()["completed"] == 2 and e.stats()["inflight"] == 0
+
+
+def test_engine_save_strips_policy_clock(tmp_path):
+    """An injected clock is runtime wiring, not artifact state: saving a
+    clocked token_bucket engine must work and reload clock-free."""
+    eng, x = fit_engine(
+        policy="token_bucket", ratio=0.2, depth=4.0, clock=ManualClock()
+    )
+    path = str(tmp_path / "clocked")
+    eng.save(path)
+    loaded = OffloadEngine.load(path)
+    assert "clock" not in loaded.policy_kwargs
+    assert loaded.policy.clock is None
+
+
+def test_simulate_drop_mode_accounts_everything(threshold_engine):
+    eng, x = threshold_engine
+    fleet = [EdgeWorker("only", capacity=1, latency=EdgeLatencyModel(base=1e6))]
+    trace = simulate(
+        eng, features=x[:64], edges=fleet, ratio=1.0, on_saturation="drop",
+        micro_batch=8, seed=0,
+    )
+    counts = trace.outcome_counts()
+    assert counts[OUTCOME_OFFLOADED] == 1  # the single slot, never freed
+    assert counts[OUTCOME_DROPPED] == 63
+    assert trace.dispatcher["dropped"] == 63
+
+
+def test_runtime_sessions_share_frozen_engine(threshold_engine):
+    """Sessions opened from one runtime decide identically on identical
+    streams — the engine is frozen, per-stream state is session-local."""
+    eng, x = threshold_engine
+    runtime = OffloadRuntime(eng, default_edge_fleet(3, seed=0))
+    s1 = runtime.open_session(micro_batch=8)
+    s2 = runtime.open_session(micro_batch=8)
+    m1 = [d.offload for d in s1.submit_batch(features=x[:48])]
+    m2 = [d.offload for d in s2.submit_batch(features=x[:48])]
+    assert m1 == m2
+
+
+def test_streaming_study_registry_helpers():
+    """Satellite: registries are enumerable for configs/error messages."""
+    from repro.api import list_feature_extractors
+
+    assert "threshold" in list_policies() and "token_bucket" in list_policies()
+    assert "detection_boxes" in list_feature_extractors()
+    assert "lm_logits" in list_feature_extractors()
