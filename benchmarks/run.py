@@ -14,40 +14,54 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
   bench_fig13_ratio_latency  detection time & mAP vs offloading ratio (Fig 13)
   bench_incremental_map      APAccumulator incremental vs full recompute
   bench_oric_batch           vectorized oric_batch vs per-image loop
+  bench_match_batch          batched device matcher vs per-image Python
+  bench_features_batch       batched feature kernel vs per-image Python
   bench_engine_score         OffloadEngine fused-Pallas batched scoring
   bench_dispatcher_throughput  streaming OffloadRuntime end-to-end frames/s
+  bench_iou                  iou_matrix ref vs Pallas side by side (+ratio)
   bench_kernels              Pallas oracles (jnp path) per-call time
 
-``--smoke`` runs only the artifact-free benches (engine scoring, dispatcher
-throughput, kernels) — the CI job.
+``--smoke`` runs only the artifact-free benches (batched data plane, engine
+scoring, dispatcher throughput, kernels) — the CI job.  Every run also
+writes ``artifacts/BENCH_<rev>.json`` (per-bench median ms + shapes) so the
+perf trajectory is tracked across commits; CI uploads it as an artifact.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 ART = os.path.join(os.path.dirname(__file__), "../artifacts")
 ROWS: List[str] = []
+BENCHES: List[Dict] = []
 
 
-def emit(name: str, us: float, derived: str) -> None:
+def emit(name: str, us: float, derived: str, shape: Optional[Dict] = None) -> None:
     row = f"{name},{us:.1f},{derived}"
     ROWS.append(row)
+    BENCHES.append(
+        {"name": name, "median_ms": round(us / 1e3, 6), "derived": derived,
+         "shape": shape or {}}
+    )
     print(row)
 
 
 def _timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    """Median per-call time in μs over ``n`` samples."""
     for _ in range(warmup):
         fn()
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(n):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / n * 1e6
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples)) * 1e6
 
 
 def _load_results():
@@ -220,6 +234,77 @@ def bench_oric_batch() -> None:
     )
 
 
+def _synthetic_detections(n_images: int, seed: int, num_classes: int = 8,
+                          size: float = 64.0):
+    """Artifact-free ragged detection/GT lists with a realistic size mix."""
+    from repro.detection.map_engine import Detections, GroundTruth
+
+    rng = np.random.default_rng(seed)
+    dets, gts = [], []
+    for _ in range(n_images):
+        m = int(rng.integers(1, 6))
+        b = rng.uniform(0, size - 25, (m, 2))
+        wh = rng.uniform(5, 20, (m, 2))
+        gts.append(GroundTruth(np.concatenate([b, b + wh], 1),
+                               rng.integers(0, num_classes, m)))
+        k = int(rng.integers(1, 12))
+        b = rng.uniform(0, size - 25, (k, 2))
+        wh = rng.uniform(5, 20, (k, 2))
+        dets.append(Detections(np.concatenate([b, b + wh], 1),
+                               rng.uniform(0.1, 1.0, k),
+                               rng.integers(0, num_classes, k)))
+    return dets, gts
+
+
+def bench_match_batch(n_images: int = 512) -> None:
+    """Batched device matcher (Pallas IoU + lax greedy scan) vs the
+    per-image Python ``match_detections`` loop at pool scale."""
+    from repro.detection.batch import DetectionsBatch, GroundTruthBatch, match_batch
+    from repro.detection.map_engine import match_detections
+
+    dets, gts = _synthetic_detections(n_images, seed=0)
+    db = DetectionsBatch.from_list(dets)
+    gb = GroundTruthBatch.from_list(gts)
+
+    def loop():
+        return [match_detections(d, g, (0.5,)) for d, g in zip(dets, gts)]
+
+    us_batch = _timeit(lambda: match_batch(db, gb, (0.5,)), n=5)
+    us_loop = _timeit(loop, n=2)
+    emit(
+        f"match_batch_b{n_images}", us_batch / n_images,
+        f"loop_us_per_image={us_loop / n_images:.1f}"
+        f";speedup={us_loop / max(us_batch, 1e-9):.1f}x",
+        shape={"images": n_images, "max_det": int(db.max_boxes),
+               "max_gt": int(gb.max_boxes), "thresholds": 1},
+    )
+
+
+def bench_features_batch(n_images: int = 512, num_classes: int = 8) -> None:
+    """One jitted feature kernel over a DetectionsBatch vs the per-image
+    numpy ``extract_features`` loop."""
+    from repro.core.features import extract_features, extract_features_batch
+    from repro.detection.batch import DetectionsBatch
+
+    dets, _ = _synthetic_detections(n_images, seed=1)
+    db = DetectionsBatch.from_list(dets)
+
+    def loop():
+        return np.stack(
+            [extract_features(d, num_classes, 25, 64.0) for d in dets]
+        )
+
+    us_batch = _timeit(lambda: extract_features_batch(db, num_classes, 25, 64.0), n=5)
+    us_loop = _timeit(loop, n=2)
+    emit(
+        f"features_batch_b{n_images}", us_batch / n_images,
+        f"loop_us_per_image={us_loop / n_images:.1f}"
+        f";speedup={us_loop / max(us_batch, 1e-9):.1f}x",
+        shape={"images": n_images, "max_det": int(db.max_boxes),
+               "top_k": 25, "num_classes": num_classes},
+    )
+
+
 def bench_engine_score() -> None:
     """OffloadEngine batched scoring through the fused Pallas MLP path."""
     from repro.api import MLPRewardModel, OffloadEngine
@@ -276,20 +361,42 @@ def bench_dispatcher_throughput() -> None:
         )
 
 
+def bench_iou(n: int = 512, m: int = 512, interpret=None) -> None:
+    """iou_matrix jnp reference vs the Pallas kernel, side by side, with the
+    pallas/ref ratio — ``interpret`` threads through to the kernel wrapper
+    (None = backend auto: compiled on TPU, interpreter on CPU)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.iou_matrix import iou_matrix, iou_matrix_ref, resolve_interpret
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(np.concatenate([rng.uniform(0, 50, (n, 2))] * 2, 1), jnp.float32)
+    b = jnp.asarray(np.concatenate([rng.uniform(0, 50, (m, 2))] * 2, 1), jnp.float32)
+    shape = {"n": n, "m": m}
+    f = jax.jit(iou_matrix_ref)
+    f(a, b).block_until_ready()
+    us_ref = _timeit(lambda: f(a, b).block_until_ready(), n=20)
+    emit(f"kernel_iou_ref_{n}x{m}", us_ref, "jnp_oracle", shape=shape)
+    mode = "interpret" if resolve_interpret(interpret) else "compiled"
+    iou_matrix(a, b, interpret=interpret).block_until_ready()
+    us_pal = _timeit(
+        lambda: iou_matrix(a, b, interpret=interpret).block_until_ready(), n=20
+    )
+    emit(
+        f"kernel_iou_pallas_{n}x{m}", us_pal,
+        f"mode={mode};pallas_over_ref={us_pal / max(us_ref, 1e-9):.2f}x",
+        shape=shape,
+    )
+
+
 def bench_kernels() -> None:
     import jax.numpy as jnp
 
     from repro.kernels.estimator_mlp.ref import estimator_mlp_ref
-    from repro.kernels.iou_matrix.ref import iou_matrix_ref
     import jax
 
     rng = np.random.default_rng(0)
-    a = jnp.asarray(np.concatenate([rng.uniform(0, 50, (512, 2))] * 2, 1), jnp.float32)
-    b = jnp.asarray(np.concatenate([rng.uniform(0, 50, (512, 2))] * 2, 1), jnp.float32)
-    f = jax.jit(iou_matrix_ref)
-    f(a, b).block_until_ready()
-    emit("kernel_iou_512x512", _timeit(lambda: f(a, b).block_until_ready(), n=20),
-         "jnp_oracle;pallas_validated_in_tests")
     x = jnp.asarray(rng.normal(0, 1, (256, 384)), jnp.float32)
     w1 = jnp.asarray(rng.normal(0, 0.1, (384, 128)), jnp.float32)
     b1 = jnp.zeros(128)
@@ -300,13 +407,46 @@ def bench_kernels() -> None:
          "jnp_oracle;pallas_validated_in_tests")
 
 
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except Exception:
+        return "dev"
+
+
+def _write_bench_json(smoke: bool) -> str:
+    import jax
+
+    rev = _git_rev()
+    path = os.path.join(ART, f"BENCH_{rev}.json")
+    payload = {
+        "rev": rev,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "benches": BENCHES,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--smoke", action="store_true",
-        help="artifact-free benches only (engine score, dispatcher, kernels)",
+        help="artifact-free benches only (batched data plane, engine score, "
+             "dispatcher, kernels)",
+    )
+    ap.add_argument(
+        "--interpret", choices=("auto", "true", "false"), default="auto",
+        help="Pallas execution mode for bench_iou (auto = backend default)",
     )
     args = ap.parse_args(argv)
+    interpret = {"auto": None, "true": True, "false": False}[args.interpret]
     print("name,us_per_call,derived")
     if not args.smoke:
         bench_fig5_context_gain()
@@ -318,14 +458,18 @@ def main(argv=None) -> None:
         bench_fig13_ratio_latency()
         bench_incremental_map()
         bench_oric_batch()
+    os.makedirs(ART, exist_ok=True)
+    bench_match_batch()
+    bench_features_batch()
     bench_engine_score()
     bench_dispatcher_throughput()
+    bench_iou(interpret=interpret)
     bench_kernels()
     out = os.path.join(ART, "bench_results_smoke.csv" if args.smoke else "bench_results.csv")
-    os.makedirs(ART, exist_ok=True)
     with open(out, "w") as f:
         f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
     print(f"# wrote {out}")
+    print(f"# wrote {_write_bench_json(args.smoke)}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from typing import (
     Optional,
     Protocol,
     Sequence,
+    Union,
     runtime_checkable,
 )
 
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.features import extract_features_batch, feature_dim
+from repro.detection.batch import DetectionsBatch
 from repro.detection.map_engine import Detections
 
 
@@ -68,7 +70,13 @@ def make_feature_extractor(name: str, **kwargs) -> FeatureExtractor:
 
 @register_feature_extractor("detection_boxes")
 class DetectionBoxFeatures:
-    """Top-K box features + global summary stats of a weak detector ([13]-style)."""
+    """Top-K box features + global summary stats of a weak detector ([13]-style).
+
+    Accepts either a padded :class:`repro.detection.batch.DetectionsBatch`
+    (the batched data plane — no per-image Python) or a ragged list of
+    ``Detections`` (padded on entry); both run the one jitted feature
+    kernel in ``repro.core.features``.
+    """
 
     def __init__(self, num_classes: int, top_k: int = 25, image_size: float = 1.0):
         self.num_classes = int(num_classes)
@@ -79,7 +87,9 @@ class DetectionBoxFeatures:
     def feature_dim(self) -> int:
         return feature_dim(self.num_classes, self.top_k)
 
-    def __call__(self, weak_outputs: Sequence[Detections]) -> np.ndarray:
+    def __call__(
+        self, weak_outputs: Union[Sequence[Detections], DetectionsBatch]
+    ) -> np.ndarray:
         return extract_features_batch(
             weak_outputs, self.num_classes, self.top_k, self.image_size
         )

@@ -25,6 +25,11 @@ from repro.core.reward import topk_offload_mask
 @runtime_checkable
 class Policy(Protocol):
     name: str
+    #: True when ``decide_batch`` enforces an exact PER-BATCH budget (its
+    #: decisions depend on how the stream is chunked).  Streaming consumers
+    #: (``OffloadSession``) must fall back to per-item ``decide`` for such
+    #: policies; buffer-invariant policies may leave the default False.
+    batch_budget: bool = False
 
     def decide(self, estimate: float) -> bool: ...
 
@@ -95,6 +100,8 @@ class TopKPolicy:
     """Exact per-batch budget: offload the top ``ratio`` fraction of the
     batch (ties resolved stably by position).  Single-item ``decide`` falls
     back to the calibration quantile threshold."""
+
+    batch_budget = True  # decide_batch depends on the chunking of the stream
 
     def __init__(self, calibration_scores: np.ndarray, ratio: float):
         self._threshold = ThresholdPolicy(calibration_scores, ratio)

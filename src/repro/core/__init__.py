@@ -7,6 +7,7 @@ from repro.core.reward import (
     RewardOracle,
     cascade_map,
     match_pairs,
+    match_pairs_batched,
     ori,
     ori_batch,
     topk_offload_mask,
@@ -37,6 +38,7 @@ __all__ = [
     "RewardOracle",
     "cascade_map",
     "match_pairs",
+    "match_pairs_batched",
     "ori",
     "ori_batch",
     "topk_offload_mask",

@@ -1,10 +1,20 @@
 """Detection substrate: box ops, matching, mAP engine, TIDE errors, NMS.
 
-Two layers:
+Three layers:
   * ``boxes`` — jnp, jit-able, used inside models/losses and Pallas refs.
+  * ``batch`` — the padded struct-of-arrays data plane: ``DetectionsBatch``
+    / ``GroundTruthBatch`` and the device-resident ``match_batch`` greedy
+    matcher on the ``iou_matrix`` Pallas kernel.
   * ``map_engine`` / ``tide`` — numpy, host-side evaluation (variable-length
     detection lists), used by the ORIC reward machinery in ``repro.core``.
 """
+from repro.detection.batch import (
+    DetectionsBatch,
+    GroundTruthBatch,
+    MatchResult,
+    match_batch,
+    to_image_evals,
+)
 from repro.detection.boxes import (
     box_area,
     box_iou,
@@ -23,6 +33,11 @@ from repro.detection.nms import nms
 from repro.detection.tide import tide_errors
 
 __all__ = [
+    "DetectionsBatch",
+    "GroundTruthBatch",
+    "MatchResult",
+    "match_batch",
+    "to_image_evals",
     "box_area",
     "box_iou",
     "box_iou_np",

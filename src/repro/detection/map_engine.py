@@ -43,7 +43,9 @@ class Detections:
         return self.boxes.shape[0]
 
     def top_k(self, k: int) -> "Detections":
-        order = np.argsort(-self.scores)[:k]
+        # stable: ties keep insertion order, matching the batched data
+        # plane's stable top-k selection (repro.core.features)
+        order = np.argsort(-self.scores, kind="stable")[:k]
         return Detections(self.boxes[order], self.scores[order], self.classes[order])
 
 

@@ -31,12 +31,18 @@ from repro.core import (
     dcsb_signals,
     extract_features_batch,
     fit_dcsb,
-    match_pairs,
+    match_pairs_batched,
     ori_batch,
     random_offload_mask,
     topk_offload_mask,
 )
 from repro.data.shapes import NUM_CLASSES, ShapesDataset
+from repro.detection.batch import (
+    DetectionsBatch,
+    GroundTruthBatch,
+    match_batch,
+    to_image_evals,
+)
 from repro.detection.map_engine import Detections, dataset_map
 from repro.detection.tide import tide_errors
 from repro.models.detector import STRONG, WEAK, decode_detections
@@ -102,18 +108,21 @@ def build_pipeline(
     strong_val = decode_detections(params["strong"], STRONG, val.images)
     weak_pool = decode_detections(params["weak"], WEAK, pool.images)
 
-    val_pairs = match_pairs(weak_val, strong_val, val.gts)
-    from repro.detection.map_engine import match_detections
-
-    pool_weak_evals = [
-        match_detections(d, g, (0.5,)) for d, g in zip(weak_pool, pool.gts)
-    ]
+    # everything downstream runs through the batched data plane: pad once,
+    # match/featurize on device, convert to ImageEvals for the AP machinery
+    weak_val_batch = DetectionsBatch.from_list(weak_val)
+    val_pairs = match_pairs_batched(weak_val_batch, strong_val, val.gts)
+    pool_batch = DetectionsBatch.from_list(weak_pool)
+    pool_gt_batch = GroundTruthBatch.from_list(pool.gts)
+    pool_weak_evals = to_image_evals(
+        pool_batch, pool_gt_batch, match_batch(pool_batch, pool_gt_batch, (0.5,))
+    )
     weak_map = dataset_map(weak_val, val.gts)
     strong_map = dataset_map(strong_val, val.gts)
     if verbose:
         print(f"[pipeline] weak mAP={weak_map:.4f} strong mAP={strong_map:.4f}")
     feats = extract_features_batch(
-        weak_val, NUM_CLASSES, image_size=float(WEAK.image_size)
+        weak_val_batch, NUM_CLASSES, image_size=float(WEAK.image_size)
     )
     state = PipelineState(
         val_pairs=val_pairs,

@@ -1,4 +1,8 @@
-from repro.kernels.iou_matrix.ops import iou_matrix
+from repro.kernels.iou_matrix.ops import (
+    iou_matrix,
+    iou_matrix_batch,
+    resolve_interpret,
+)
 from repro.kernels.iou_matrix.ref import iou_matrix_ref
 
-__all__ = ["iou_matrix", "iou_matrix_ref"]
+__all__ = ["iou_matrix", "iou_matrix_batch", "iou_matrix_ref", "resolve_interpret"]

@@ -9,6 +9,11 @@ a (4, TM) strip, all VPU element-wise ops on broadcast corners (no MXU).
 Grid: (N/TN, M/TM).  VMEM per step: 4·TN + 4·TM + TN·TM floats —
 TN=TM=256 → 260 KB, far under the ~16 MB VMEM budget, leaving room for
 double buffering.
+
+``iou_matrix_batch_pallas`` is the per-image batched variant behind the
+detection data plane (repro.detection.batch): boxes are (B, 4, K) / (B, 4, M)
+and the grid gains a leading image-block axis — one (TB, TN, TM) output tile
+per step, each image matched only against its own ground truth.
 """
 from __future__ import annotations
 
@@ -36,6 +41,50 @@ def _iou_kernel(a_ref, b_ref, out_ref):
     area_b = jnp.maximum(bx2 - bx1, 0.0) * jnp.maximum(by2 - by1, 0.0)
     union = area_a[:, None] + area_b[None, :] - inter
     out_ref[...] = jnp.where(union > 0, inter / jnp.maximum(union, 1e-12), 0.0)
+
+
+def _iou_batch_kernel(a_ref, b_ref, out_ref):
+    a = a_ref[...]  # (TB, 4, TN)
+    b = b_ref[...]  # (TB, 4, TM)
+    ax1, ay1, ax2, ay2 = a[:, 0], a[:, 1], a[:, 2], a[:, 3]  # (TB, TN)
+    bx1, by1, bx2, by2 = b[:, 0], b[:, 1], b[:, 2], b[:, 3]  # (TB, TM)
+    lt_x = jnp.maximum(ax1[:, :, None], bx1[:, None, :])  # (TB, TN, TM)
+    lt_y = jnp.maximum(ay1[:, :, None], by1[:, None, :])
+    rb_x = jnp.minimum(ax2[:, :, None], bx2[:, None, :])
+    rb_y = jnp.minimum(ay2[:, :, None], by2[:, None, :])
+    iw = jnp.maximum(rb_x - lt_x, 0.0)
+    ih = jnp.maximum(rb_y - lt_y, 0.0)
+    inter = iw * ih
+    area_a = jnp.maximum(ax2 - ax1, 0.0) * jnp.maximum(ay2 - ay1, 0.0)
+    area_b = jnp.maximum(bx2 - bx1, 0.0) * jnp.maximum(by2 - by1, 0.0)
+    union = area_a[:, :, None] + area_b[:, None, :] - inter
+    out_ref[...] = jnp.where(union > 0, inter / jnp.maximum(union, 1e-12), 0.0)
+
+
+def iou_matrix_batch_pallas(
+    a_t: jnp.ndarray,  # (B, 4, K) transposed per-image boxes
+    b_t: jnp.ndarray,  # (B, 4, M)
+    tile_b: int = 8,
+    tile_n: int = 128,
+    tile_m: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, K, M = a_t.shape[0], a_t.shape[2], b_t.shape[2]
+    assert B % tile_b == 0 and K % tile_n == 0 and M % tile_m == 0, (
+        B, K, M, tile_b, tile_n, tile_m,
+    )
+    grid = (B // tile_b, K // tile_n, M // tile_m)
+    return pl.pallas_call(
+        _iou_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, 4, tile_n), lambda b, i, j: (b, 0, i)),
+            pl.BlockSpec((tile_b, 4, tile_m), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, tile_n, tile_m), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, K, M), a_t.dtype),
+        interpret=interpret,
+    )(a_t, b_t)
 
 
 def iou_matrix_pallas(

@@ -1,23 +1,32 @@
-"""jit'd wrapper: pads to tile multiples, transposes to the lane-aligned
-(4, N) layout, calls the Pallas kernel, crops."""
+"""jit'd wrappers: pad to tile multiples, transpose to the lane-aligned
+``(..., 4, N)`` layout, call the Pallas kernel, crop.
+
+``interpret=None`` (the default) resolves to the backend: compiled Pallas on
+TPU/GPU, interpreter mode only where no compiled lowering exists (the CPU
+test/CI environments).  Passing an explicit bool forces either path — the
+benchmarks thread it through to compare the two.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.iou_matrix.kernel import iou_matrix_pallas
+from repro.kernels.iou_matrix.kernel import iou_matrix_batch_pallas, iou_matrix_pallas
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> auto: interpret only when the backend has no compiled Pallas
+    lowering (CPU).  TPU (and GPU triton) run the compiled kernel."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "tile_m", "interpret"))
-def iou_matrix(
-    a: jnp.ndarray,  # (N, 4)
-    b: jnp.ndarray,  # (M, 4)
-    tile_n: int = 256,
-    tile_m: int = 256,
-    interpret: bool = True,
-) -> jnp.ndarray:
+def _iou_matrix(a, b, tile_n, tile_m, interpret):
     N, M = a.shape[0], b.shape[0]
     Np = -(-max(N, 1) // tile_n) * tile_n
     Mp = -(-max(M, 1) // tile_m) * tile_m
@@ -26,3 +35,43 @@ def iou_matrix(
     b_p = jnp.zeros((Mp, 4), b.dtype).at[:M].set(b)
     out = iou_matrix_pallas(a_p.T, b_p.T, tile_n, tile_m, interpret=interpret)
     return out[:N, :M]
+
+
+def iou_matrix(
+    a: jnp.ndarray,  # (N, 4)
+    b: jnp.ndarray,  # (M, 4)
+    tile_n: int = 256,
+    tile_m: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    return _iou_matrix(a, b, tile_n, tile_m, resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_b", "tile_n", "tile_m", "interpret")
+)
+def _iou_matrix_batch(a, b, tile_b, tile_n, tile_m, interpret):
+    B, K, M = a.shape[0], a.shape[1], b.shape[1]
+    Bp = -(-max(B, 1) // tile_b) * tile_b
+    Kp = -(-max(K, 1) // tile_n) * tile_n
+    Mp = -(-max(M, 1) // tile_m) * tile_m
+    a_p = jnp.zeros((Bp, Kp, 4), a.dtype).at[:B, :K].set(a)
+    b_p = jnp.zeros((Bp, Mp, 4), b.dtype).at[:B, :M].set(b)
+    out = iou_matrix_batch_pallas(
+        a_p.transpose(0, 2, 1), b_p.transpose(0, 2, 1),
+        tile_b, tile_n, tile_m, interpret=interpret,
+    )
+    return out[:B, :K, :M]
+
+
+def iou_matrix_batch(
+    a: jnp.ndarray,  # (B, K, 4) per-image boxes
+    b: jnp.ndarray,  # (B, M, 4)
+    tile_b: int = 8,
+    tile_n: int = 128,
+    tile_m: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Per-image pairwise IoU, image i matched only against its own row:
+    ``out[i] = iou(a[i], b[i])`` with shape (B, K, M)."""
+    return _iou_matrix_batch(a, b, tile_b, tile_n, tile_m, resolve_interpret(interpret))

@@ -109,7 +109,8 @@ class OffloadSession:
         self.policy = make_policy(
             engine.policy_name, engine.calibration_scores, self._ratio, **kwargs
         )
-        self._buffer: List[Any] = []          # pending feature rows
+        self._pending: List[np.ndarray] = []  # pending (n_i, F) feature blocks
+        self._pending_rows = 0
         self._next_step = 0                   # arrival index of next submit
         self._window = deque(maxlen=max(int(telemetry_window), 1))
         self._processed = 0
@@ -132,14 +133,12 @@ class OffloadSession:
                 raise ValueError(
                     f"submit() takes one frame; features must be 1-D, got {row.shape}"
                 )
-            self._buffer.append(row)
+            self._enqueue(row[None, :])
         else:
             if weak_output is None:
                 raise ValueError("pass weak_output or features=")
-            row = self.engine.features([weak_output])
-            self._buffer.append(np.asarray(row, np.float32)[0])
-        self._next_step += 1
-        if len(self._buffer) >= self.micro_batch:
+            self._enqueue(np.asarray(self.engine.features([weak_output]), np.float32))
+        if self._pending_rows >= self.micro_batch:
             return self.flush()
         return []
 
@@ -150,42 +149,72 @@ class OffloadSession:
         features: Optional[np.ndarray] = None,
         flush: bool = True,
     ) -> List[StepDecision]:
-        """Stream a pre-formed batch through the session in arrival order.
+        """Stream a pre-batched matrix through the session in arrival order.
 
         Feature extraction happens once for the whole batch (adapters like
-        ``lm_logits`` consume batch-shaped weak outputs); scoring still runs
-        per micro-batch and decisions stay sequential.  With ``flush=False``
-        a trailing partial micro-batch stays buffered for the next call."""
-        x = self.engine.features(weak_outputs, features=features)
+        ``detection_boxes`` consume a ``DetectionsBatch``, ``lm_logits``
+        batch-shaped logits) and the rows enter the pending queue as ONE
+        block — no per-item conversion or row-at-a-time Python.  Scoring
+        drains in micro-batch chunks and decisions stay sequential; with
+        ``flush=False`` a trailing partial micro-batch stays buffered for
+        the next call."""
+        x = np.asarray(self.engine.features(weak_outputs, features=features), np.float32)
+        self._enqueue(x)
         out: List[StepDecision] = []
-        for row in x:
-            out.extend(self.submit(features=row))
         if flush:
             out.extend(self.flush())
+        else:
+            while self._pending_rows >= self.micro_batch:
+                out.extend(self._drain(self.micro_batch))
         return out
 
+    def _enqueue(self, block: np.ndarray) -> None:
+        if block.ndim != 2:
+            raise ValueError(f"feature blocks must be 2-D, got {block.shape}")
+        if block.shape[0]:
+            self._pending.append(block)
+            self._pending_rows += block.shape[0]
+        self._next_step += block.shape[0]
+
     def flush(self) -> List[StepDecision]:
-        """Score the buffered micro-batch (one fused-kernel call) and decide
-        each frame in arrival order through the session policy."""
-        if not self._buffer:
+        """Score everything pending (one fused-kernel call) and decide each
+        frame in arrival order through the session policy."""
+        return self._drain(self._pending_rows)
+
+    def _drain(self, rows: int) -> List[StepDecision]:
+        """Score the first ``rows`` pending frames as one batch and decide
+        them in arrival order."""
+        if rows <= 0 or not self._pending:
             return []
-        x = np.stack(self._buffer)
-        self._buffer = []
-        estimates = np.asarray(self.engine.score(features=x), np.float64).ravel()
-        # the buffer held exactly the arrivals not yet decided, so the flushed
-        # rows are the trailing len(estimates) arrival indices
-        first = self._next_step - len(estimates)
-        out: List[StepDecision] = []
-        for i, est in enumerate(estimates):
-            offload = bool(self.policy.decide(float(est)))
-            self._processed += 1
-            self._offloaded += int(offload)
-            self._estimate_sum += float(est)
-            self._window.append(offload)
-            out.append(
-                StepDecision(step=first + i, estimate=float(est), offload=offload)
+        x = self._pending[0] if len(self._pending) == 1 else np.concatenate(self._pending)
+        head, tail = x[:rows], x[rows:]
+        self._pending = [tail] if tail.shape[0] else []
+        self._pending_rows = tail.shape[0]
+        estimates = np.asarray(self.engine.score(features=head), np.float64).ravel()
+        if getattr(self.policy, "batch_budget", False):
+            # a per-batch budget (topk) would make streaming decisions
+            # depend on micro-batch/flush boundaries (and offload nothing
+            # at micro_batch=1) — such policies keep the per-item
+            # semantics of decide()
+            offload = np.fromiter(
+                (self.policy.decide(float(e)) for e in estimates),
+                dtype=bool, count=len(estimates),
             )
-        return out
+        else:
+            # decide_batch is buffer-invariant here: vectorized for
+            # threshold, internally sequential for token_bucket
+            offload = np.asarray(self.policy.decide_batch(estimates), bool)
+        # the queue held exactly the arrivals not yet decided, so the drained
+        # rows are the arrival indices trailing the still-pending ones
+        first = self._next_step - self._pending_rows - len(estimates)
+        self._processed += len(estimates)
+        self._offloaded += int(offload.sum())
+        self._estimate_sum += float(estimates.sum())
+        self._window.extend(bool(o) for o in offload)
+        return [
+            StepDecision(step=first + i, estimate=float(est), offload=bool(off))
+            for i, (est, off) in enumerate(zip(estimates, offload))
+        ]
 
     # --------------------------------------------------------------- control
 
@@ -217,7 +246,7 @@ class OffloadSession:
             rolling_ratio=float(np.mean(roll)) if roll else 0.0,
             mean_estimate=self._estimate_sum / n if n else 0.0,
             target_ratio=self._ratio,
-            pending=len(self._buffer),
+            pending=self._pending_rows,
             reward_sum=self._reward_sum,
             rewards_recorded=self._rewards_recorded,
         )

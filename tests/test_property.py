@@ -5,13 +5,21 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.features import extract_features, extract_features_batch
 from repro.core.reward import CdfTransform, topk_offload_mask
+from repro.detection.batch import (
+    DetectionsBatch,
+    GroundTruthBatch,
+    match_batch,
+    to_image_evals,
+)
 from repro.detection.boxes import box_iou_np
 from repro.detection.map_engine import (
     Detections,
     GroundTruth,
     average_precision,
     dataset_map,
+    match_detections,
 )
 
 finite = st.floats(min_value=0.0, max_value=100.0, allow_nan=False)
@@ -89,6 +97,76 @@ def test_topk_mask_exact_budget(n, ratio, seed):
     if 0 < mask.sum() < n:
         # every offloaded score >= every kept score
         assert scores[mask].min() >= scores[~mask].max() - 1e-12
+
+
+# ----------------------------------------------------- batched data plane
+#
+# Boxes live on an integer grid and scores on a 1/256 grid so float32
+# (batched) and float64 (per-image reference) agree bit-for-bit on every
+# IoU-threshold comparison, argmax tie-break, and score sort — the batched
+# matcher is then required to be EXACTLY the per-image one.
+
+NUM_CLASSES = 4
+
+
+@st.composite
+def ragged_images(draw, n_images=4, max_det=6, max_gt=5):
+    """Per-example ragged (Detections, GroundTruth) lists, including empty
+    detections and empty-GT (all-padded) rows."""
+    dets, gts = [], []
+    for _ in range(n_images):
+        m = draw(st.integers(0, max_gt))
+        g_boxes, g_cls = [], []
+        for _ in range(m):
+            x = draw(st.integers(0, 24)); y = draw(st.integers(0, 24))
+            w = draw(st.integers(1, 12)); h = draw(st.integers(1, 12))
+            g_boxes.append([x, y, x + w, y + h])
+            g_cls.append(draw(st.integers(0, NUM_CLASSES - 1)))
+        gts.append(
+            GroundTruth(np.array(g_boxes, float).reshape(-1, 4), np.array(g_cls, int))
+        )
+        k = draw(st.integers(0, max_det))
+        d_boxes, d_cls, d_scores = [], [], []
+        for _ in range(k):
+            x = draw(st.integers(0, 24)); y = draw(st.integers(0, 24))
+            w = draw(st.integers(1, 12)); h = draw(st.integers(1, 12))
+            d_boxes.append([x, y, x + w, y + h])
+            d_cls.append(draw(st.integers(0, NUM_CLASSES - 1)))
+            d_scores.append(draw(st.integers(1, 256)) / 256.0)
+        dets.append(
+            Detections(
+                np.array(d_boxes, float).reshape(-1, 4),
+                np.array(d_scores, float),
+                np.array(d_cls, int),
+            )
+        )
+    return dets, gts
+
+
+@given(ragged_images())
+@settings(max_examples=40, deadline=None)
+def test_match_batch_equals_per_image_matching(batch):
+    dets, gts = batch
+    thresholds = (0.5, 0.75)
+    db = DetectionsBatch.from_list(dets)
+    gb = GroundTruthBatch.from_list(gts)
+    evs = to_image_evals(db, gb, match_batch(db, gb, thresholds))
+    for ev, d, g in zip(evs, dets, gts):
+        ref = match_detections(d, g, thresholds)
+        assert ev.gt_counts == ref.gt_counts
+        assert set(ev.per_class) == set(ref.per_class)
+        for c in ref.per_class:
+            assert np.array_equal(ev.per_class[c][1], ref.per_class[c][1])
+            assert np.array_equal(ev.matched_gt[c], ref.matched_gt[c])
+
+
+@given(ragged_images())
+@settings(max_examples=30, deadline=None)
+def test_features_batched_equals_per_image(batch):
+    dets, _ = batch
+    ref = np.stack([extract_features(d, NUM_CLASSES, 25, 32.0) for d in dets])
+    got = extract_features_batch(dets, NUM_CLASSES, 25, 32.0)
+    np.testing.assert_allclose(got, ref, atol=2e-5, rtol=1e-5)
 
 
 @given(st.integers(0, 2**31 - 1), st.integers(1, 8))
