@@ -18,13 +18,17 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
   bench_features_batch       batched feature kernel vs per-image Python
   bench_engine_score         OffloadEngine fused-Pallas batched scoring
   bench_dispatcher_throughput  streaming OffloadRuntime end-to-end frames/s
+  bench_netsim_throughput    congested GE-linked fleet frames/s + the
+                             value-iteration ref loop vs jitted scan sweep
   bench_iou                  iou_matrix ref vs Pallas side by side (+ratio)
   bench_kernels              Pallas oracles (jnp path) per-call time
 
 ``--smoke`` runs only the artifact-free benches (batched data plane, engine
-scoring, dispatcher throughput, kernels) — the CI job.  Every run also
-writes ``artifacts/BENCH_<rev>.json`` (per-bench median ms + shapes) so the
-perf trajectory is tracked across commits; CI uploads it as an artifact.
+scoring, dispatcher/netsim throughput, kernels) — the CI job.  ``--only
+<substring>`` filters either set by bench name (a dev iteration aid: such
+runs skip the artifact writes below).  Every full run also writes
+``artifacts/BENCH_<rev>.json`` (per-bench median ms + shapes) so the perf
+trajectory is tracked across commits; CI uploads it as an artifact.
 """
 from __future__ import annotations
 
@@ -361,6 +365,63 @@ def bench_dispatcher_throughput() -> None:
         )
 
 
+def bench_netsim_throughput() -> None:
+    """The netsim data plane end to end: queue-aware streaming through a
+    congested Gilbert–Elliott 3-edge fleet (frames/s), plus the
+    value-iteration solver — per-state Python reference loop vs the jitted
+    ``lax.scan`` vmapped over a whole ratio grid."""
+    from repro.netsim import (
+        quantile_threshold,
+        value_iteration_ref,
+        value_iteration_sweep,
+    )
+    from repro.netsim.policy import _estimate_bins
+    from repro.runtime import default_congested_fleet, simulate
+
+    eng, x = _smoke_engine(n=512)
+    qa = eng.with_policy("queue_aware")
+    n = len(x)
+
+    def run():
+        return simulate(
+            qa, features=x, edges=default_congested_fleet(3, seed=0),
+            ratio=0.3, micro_batch=1, seed=0,
+        )
+
+    us = _timeit(run, n=2, warmup=1)
+    trace = run()
+    d = trace.latency_decomposition() or {}
+    emit(
+        f"netsim_congested_fps_b{n}", us / n,
+        f"frames_per_s={n / (us / 1e6):.0f}"
+        f";mean_queue_delay={d.get('queue', 0.0):.2f}"
+        f";offloaded={trace.outcome_counts().get('offloaded', 0)}",
+        shape={"frames": n, "edges": 3},
+    )
+
+    cal = np.asarray(eng.calibration_scores)
+    ratios = np.linspace(0.05, 0.95, 16)
+    e_bins = _estimate_bins(cal, 32)
+
+    def ref_loop():
+        return [
+            value_iteration_ref(
+                e_bins, quantile_threshold(cal, r), max_queue=16, n_sweeps=64
+            )
+            for r in ratios
+        ]
+
+    us_ref = _timeit(ref_loop, n=2)
+    kw = dict(max_queue=16, n_sweeps=64, n_bins=32)
+    value_iteration_sweep(cal, ratios, **kw)  # compile
+    us_jit = _timeit(lambda: value_iteration_sweep(cal, ratios, **kw), n=5)
+    emit(
+        "netsim_value_iteration_sweep", us_jit,
+        f"ref_loop_us={us_ref:.0f};speedup={us_ref / max(us_jit, 1e-9):.1f}x",
+        shape={"ratios": len(ratios), "max_queue": 16, "sweeps": 64, "bins": 32},
+    )
+
+
 def bench_iou(n: int = 512, m: int = 512, interpret=None) -> None:
     """iou_matrix jnp reference vs the Pallas kernel, side by side, with the
     pallas/ref ratio — ``interpret`` threads through to the kernel wrapper
@@ -445,26 +506,47 @@ def main(argv=None) -> None:
         "--interpret", choices=("auto", "true", "false"), default="auto",
         help="Pallas execution mode for bench_iou (auto = backend default)",
     )
+    ap.add_argument(
+        "--only", default=None, metavar="SUBSTRING",
+        help="run only benches whose name contains SUBSTRING "
+             "(applied after --smoke selection)",
+    )
     args = ap.parse_args(argv)
     interpret = {"auto": None, "true": True, "false": False}[args.interpret]
+    full = [
+        ("fig5_context_gain", bench_fig5_context_gain),
+        ("fig5_context_cost", bench_fig5_context_cost),
+        ("table2_conservatism", bench_table2_conservatism),
+        ("fig6_errors", bench_fig6_errors),
+        ("fig9_10_policies", bench_fig9_10_policies),
+        ("table3_pipeline", bench_table3_pipeline),
+        ("fig13_ratio_latency", bench_fig13_ratio_latency),
+        ("incremental_map", bench_incremental_map),
+        ("oric_batch", bench_oric_batch),
+    ]
+    smoke = [
+        ("match_batch", bench_match_batch),
+        ("features_batch", bench_features_batch),
+        ("engine_score", bench_engine_score),
+        ("dispatcher_throughput", bench_dispatcher_throughput),
+        ("netsim_throughput", bench_netsim_throughput),
+        ("iou", lambda: bench_iou(interpret=interpret)),
+        ("kernels", bench_kernels),
+    ]
+    selected = ([] if args.smoke else full) + smoke
+    if args.only is not None:
+        selected = [(name, fn) for name, fn in selected if args.only in name]
+        if not selected:
+            ap.error(f"--only {args.only!r} matches no bench")
     print("name,us_per_call,derived")
-    if not args.smoke:
-        bench_fig5_context_gain()
-        bench_fig5_context_cost()
-        bench_table2_conservatism()
-        bench_fig6_errors()
-        bench_fig9_10_policies()
-        bench_table3_pipeline()
-        bench_fig13_ratio_latency()
-        bench_incremental_map()
-        bench_oric_batch()
     os.makedirs(ART, exist_ok=True)
-    bench_match_batch()
-    bench_features_batch()
-    bench_engine_score()
-    bench_dispatcher_throughput()
-    bench_iou(interpret=interpret)
-    bench_kernels()
+    for _, fn in selected:
+        fn()
+    if args.only is not None:
+        # a filtered run is a dev iteration: never overwrite the canonical
+        # full-run artifacts with a subset
+        print("# --only run: artifacts not written")
+        return
     out = os.path.join(ART, "bench_results_smoke.csv" if args.smoke else "bench_results.csv")
     with open(out, "w") as f:
         f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")

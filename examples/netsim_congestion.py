@@ -1,0 +1,104 @@
+"""Network simulation walkthrough: congestion-aware offloading end to end.
+
+The paper's deployment setting puts the strong detector behind a
+rate-constrained wireless uplink.  ``repro.netsim`` makes that link
+explicit — size-dependent transmission delay, a bounded FIFO uplink queue,
+and a seeded Gilbert–Elliott fading channel — and adds two queue-aware
+decision policies on top of the ``OffloadEngine`` registry:
+
+- ``queue_aware``   threshold on the congestion-discounted estimate with an
+                    integral budget tracker (defer in fades, pay back after),
+- ``value_iteration`` the (queue depth x channel state) MDP, solved as one
+                    jitted ``jax.lax.scan``.
+
+This example (1) shows the raw netsim pieces, (2) runs the seeded
+congestion scenario under ``threshold`` vs ``queue_aware`` vs
+``value_iteration`` at the same budget, and (3) sweeps the value-iteration
+thresholds over a whole ratio grid in one batched device call.
+
+Run:  python examples/netsim_congestion.py
+      (after `pip install -e .`, or prefix with PYTHONPATH=src)
+"""
+import numpy as np
+
+from repro.api import MLPRewardModel, OffloadEngine
+from repro.core import EstimatorConfig
+from repro.netsim import GilbertElliottLink, UplinkQueue, value_iteration_sweep
+from repro.runtime import default_congested_fleet, simulate
+
+
+def fitted_engine(n=2000, d=24, seed=0) -> OffloadEngine:
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    rewards = 1.5 * x[:, 0] - 0.8 * x[:, 1] + 0.3 * rng.normal(size=n)
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(32,), epochs=20, seed=seed)
+        ),
+        ratio=0.35,
+    )
+    eng.fit(features=x, rewards=rewards)
+    return eng
+
+
+def main() -> None:
+    print("== the raw pieces: a fading link behind a bounded FIFO ==")
+    link = GilbertElliottLink(
+        bandwidth=0.5, bad_bandwidth=0.125, p_gb=0.1, p_bg=0.3, seed=4
+    )
+    queue = UplinkQueue(link, depth=6, frame_bits=1.0)
+    for step in range(8):
+        f = queue.enqueue(0.6 * step, step)
+        if f is None:
+            print(f"  frame {step}: DROPPED (queue full)")
+        else:
+            print(
+                f"  frame {step}: wait {f.queue_delay:5.2f}"
+                f"  transmit {f.transmit_delay:5.2f}"
+                f"  delivered t={f.t_delivered:5.2f}"
+            )
+    queue.poll(1e9)
+    print(f"  conservation: {queue.stats()}")
+
+    print("\n== seeded congestion scenario, three policies, one budget ==")
+    engine = fitted_engine()
+    stream = np.random.default_rng(42).normal(0, 1, (400, 24)).astype(np.float32)
+    policies = {
+        "threshold": engine,
+        "queue_aware": engine.with_policy("queue_aware"),
+        "value_iteration": engine.with_policy(
+            "value_iteration", policy_kwargs=dict(max_queue=12, delay_cost=0.03)
+        ),
+    }
+    for name, eng in policies.items():
+        trace = simulate(
+            eng, features=stream, edges=default_congested_fleet(3, seed=5),
+            ratio=0.35, micro_batch=1, seed=5,
+        )
+        s = trace.summary()
+        d = s["latency_decomposition"] or {}
+        print(
+            f"  {name:16s} realized_ratio={s['telemetry']['realized_ratio']:.3f}"
+            f"  mean_latency={s['mean_offload_latency']:6.2f}"
+            f"  (queue {d.get('queue', 0):5.2f} + transmit {d.get('transmit', 0):5.2f}"
+            f" + service {d.get('service', 0):4.2f})"
+        )
+    print("  -> queue-aware policies trade the queue component away at the")
+    print("     same offload budget; the trace proves where the time went.")
+
+    print("\n== value-iteration threshold tables, one batched solve ==")
+    ratios = [0.1, 0.3, 0.5]
+    thetas = value_iteration_sweep(
+        engine.calibration_scores, ratios, max_queue=8, n_sweeps=60
+    )
+    print(f"  theta grid shape {thetas.shape}  (ratio x queue-depth x channel)")
+    for r, th in zip(ratios, thetas):
+        print(
+            f"  ratio {r:.1f}: offload threshold rises"
+            f" q=0 {th[0, 0]:.2f} -> q=8 {th[8, 0]:.2f} (good)"
+            f" | bad channel q=0 {th[0, 1]:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,7 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 from repro.api.features import FeatureExtractor, make_feature_extractor
-from repro.api.policies import Policy, make_policy
+from repro.api.policies import Policy, make_policy, policy_context_params
 from repro.api.reward_model import (
     MLPRewardModel,
     RewardModel,
@@ -159,6 +159,39 @@ class OffloadEngine:
         if self.policy is not None:
             self.policy.set_ratio(ratio)
 
+    def with_policy(
+        self,
+        policy: str,
+        *,
+        ratio: Optional[float] = None,
+        policy_kwargs: Optional[Dict[str, Any]] = None,
+    ) -> "OffloadEngine":
+        """A clone sharing every fitted component (extractor, reward model,
+        transform, calibration scores) under a different decision policy —
+        fit once, compare policies at equal budgets (the congestion studies
+        and benchmarks do)."""
+        if self.calibration_scores is None:
+            raise RuntimeError("with_policy() before fit()/load()")
+        # like save(): the policy may have been re-budgeted directly by
+        # back-compat callers, so its ratio is the live one
+        live_ratio = float(getattr(self.policy, "ratio", self.ratio))
+        clone = OffloadEngine(
+            feature_extractor=self.feature_extractor,
+            reward_model=self.reward_model,
+            transform=self.transform_kind,
+            policy=policy,
+            ratio=live_ratio if ratio is None else float(ratio),
+            policy_kwargs=policy_kwargs,
+        )
+        clone.transform = self.transform
+        clone.calibration_scores = self.calibration_scores
+        clone.extra_meta = dict(self.extra_meta)
+        clone.policy = make_policy(
+            clone.policy_name, clone.calibration_scores, clone.ratio,
+            **clone.policy_kwargs,
+        )
+        return clone
+
     # ------------------------------------------------------------ save/load
 
     def save(self, path: str, extra_meta: Optional[Dict[str, Any]] = None) -> None:
@@ -176,9 +209,12 @@ class OffloadEngine:
         # the policy may have been re-budgeted directly (back-compat callers
         # hold it via LMCascade.policy): its ratio is the live one
         live_ratio = float(getattr(self.policy, "ratio", self.ratio))
-        # injected clocks (time-based policies) are runtime wiring, never
-        # part of the artifact — a loaded engine gets a fresh clock
-        policy_kwargs = {k: v for k, v in self.policy_kwargs.items() if k != "clock"}
+        # injected callables (clocks, congestion probes) are runtime wiring,
+        # never part of the artifact — a loaded engine gets fresh ones
+        context = set(policy_context_params(self.policy_name))
+        policy_kwargs = {
+            k: v for k, v in self.policy_kwargs.items() if k not in context
+        }
         meta = {
             "kind": "offload_engine",
             "version": 1,

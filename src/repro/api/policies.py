@@ -11,6 +11,15 @@ and exposes the common contract:
 Registered: ``threshold`` (the paper's deployable quantile threshold),
 ``topk`` (exact per-batch top-k, the oracle-style evaluation policy), and
 ``token_bucket`` (hard rate constraint with burst tolerance, [23]-style).
+The netsim policies (``queue_aware``, ``value_iteration`` — see
+:mod:`repro.netsim.policy`) register themselves on first registry access,
+so engine-built runtimes get them without importing ``repro.netsim``.
+
+Policies that consume *runtime wiring* — injected zero-arg callables like
+the simulation clock or a live congestion probe — declare the kwarg names
+in a ``context_params`` class attribute.  Streaming sessions use it to
+inject only what a policy accepts, and ``OffloadEngine.save`` uses it to
+strip the callables from the serialized artifact.
 """
 from __future__ import annotations
 
@@ -30,6 +39,9 @@ class Policy(Protocol):
     #: (``OffloadSession``) must fall back to per-item ``decide`` for such
     #: policies; buffer-invariant policies may leave the default False.
     batch_budget: bool = False
+    #: constructor kwargs that are runtime-injected callables (clock,
+    #: congestion probes, ...) — never serialized with the engine artifact.
+    context_params: tuple = ()
 
     def decide(self, estimate: float) -> bool: ...
 
@@ -54,17 +66,46 @@ def register_policy(name: str):
     return deco
 
 
+def _ensure_plugins() -> None:
+    """Import policy plugins living outside repro.api (the netsim queue-aware
+    controllers) so registry lookups see them.  Lazy — called at lookup time,
+    when repro.api.policies is fully initialized — so there is no import
+    cycle and importing repro.api stays cheap."""
+    import repro.netsim.policy  # noqa: F401  (registers on import)
+
+
 def list_policies() -> List[str]:
     """Registered policy names (for runtime configs and error messages)."""
+    _ensure_plugins()
     return sorted(_POLICIES)
+
+
+def policy_context_params(name: str) -> tuple:
+    """The runtime-injected (never serialized) constructor kwargs a policy
+    declares — see ``Policy.context_params``."""
+    _ensure_plugins()
+    if name not in _POLICIES:
+        raise KeyError(f"unknown policy {name!r}; have {list_policies()}")
+    return tuple(getattr(_POLICIES[name], "context_params", ()))
 
 
 def make_policy(
     name: str, calibration_scores: np.ndarray, ratio: float, **kwargs
 ) -> Policy:
+    _ensure_plugins()
     if name not in _POLICIES:
         raise KeyError(f"unknown policy {name!r}; have {list_policies()}")
     return _POLICIES[name](calibration_scores, ratio, **kwargs)
+
+
+def decide_sequential(policy: Policy, estimates: np.ndarray) -> np.ndarray:
+    """``decide()`` each estimate in stream order — the ``decide_batch``
+    body shared by stateful policies (token buckets, congestion trackers)
+    whose decisions evolve item to item."""
+    flat = np.asarray(estimates).ravel()
+    return np.fromiter(
+        (policy.decide(float(e)) for e in flat), dtype=bool, count=flat.size
+    )
 
 
 @register_policy("threshold")
@@ -131,6 +172,8 @@ class TokenBucketPolicy:
     inject their simulation clock here.
     """
 
+    context_params = ("clock",)
+
     def __init__(
         self,
         calibration_scores: np.ndarray,
@@ -167,11 +210,7 @@ class TokenBucketPolicy:
 
     def decide_batch(self, estimates: np.ndarray) -> np.ndarray:
         # sequential by construction: estimates arrive in stream order
-        return np.fromiter(
-            (self.decide(float(e)) for e in np.asarray(estimates).ravel()),
-            dtype=bool,
-            count=np.asarray(estimates).size,
-        )
+        return decide_sequential(self, estimates)
 
     def spec(self) -> Dict[str, Any]:
         return {"depth": self.depth}

@@ -1,0 +1,429 @@
+"""Queue-aware offloading policies over the netsim layer.
+
+Two controllers, both registered in the ``repro.api`` policy registry (so
+``OffloadEngine(policy="queue_aware")`` / ``"value_iteration"`` and every
+runtime built on the engine get them for free):
+
+- ``queue_aware`` — the engine's quantile-threshold rule with the reward
+  estimate *discounted by predicted queueing delay* (a bounded penalty
+  ``delay_weight * d / (d + delay_scale)``), plus an integral controller on
+  the realized ratio so deferring offloads during congestion is paid back
+  in uncongested windows — the realized ratio tracks the target while the
+  offloads themselves land where the queue is short.
+- ``value_iteration`` — the Qiu et al.-style MDP over
+  ``(queue depth × channel state)``: value iteration with the calibration
+  score distribution as the per-frame reward prior, solved as one **jitted
+  ``jax.lax.scan``** over Bellman sweeps (every state updated vectorized per
+  sweep, no per-state Python loop), yielding a per-state threshold table
+  ``theta[q, c]`` — offload iff estimate > theta at the observed state.
+  ``value_iteration_sweep`` vmaps the solver over a ratio grid so policy /
+  budget sweeps run batched on device.
+
+Both consume *runtime-injected context* (``congestion`` / ``state_probe``
+zero-arg callables, wired by ``OffloadRuntime.open_session`` exactly like
+the ``token_bucket`` clock) and degrade gracefully without it: no probe
+means no congestion signal, and both collapse to plain threshold behavior.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.policies import decide_sequential, register_policy
+
+#: finite sentinels for the degenerate budgets (ratio 0 / 1); kept finite so
+#: the Bellman backup stays nan-free (mirrors TokenBucketPolicy.set_ratio)
+_NEVER = 1e9
+_ALWAYS = -1e9
+
+
+def quantile_threshold(calibration_scores: np.ndarray, ratio: float) -> float:
+    """The (1 - ratio)-quantile of the calibration distribution, with finite
+    sentinels at the degenerate budgets."""
+    cal = np.asarray(calibration_scores, np.float64)
+    r = float(np.clip(ratio, 0.0, 1.0))
+    if cal.size == 0 or r >= 1.0:
+        return _ALWAYS
+    if r <= 0.0:
+        return _NEVER
+    return float(np.quantile(cal, 1.0 - r))
+
+
+# --------------------------------------------------------------- queue_aware
+
+
+@register_policy("queue_aware")
+class QueueAwarePolicy:
+    """Quantile threshold on a congestion-discounted estimate, with an
+    integral ratio controller.
+
+    Parameters (beyond the registry's ``calibration_scores, ratio``):
+
+    delay_weight : float
+        Max penalty subtracted from the estimate as predicted delay grows
+        (estimates are rank-transformed into [0, 1] by the engine's CDF, so
+        1.0 means "infinite queue kills any offload").
+    delay_scale : float
+        Delay (in sim time units) at which half the max penalty applies.
+    gain : float
+        Integral gain of the budget tracker: with ``deficit`` the running
+        shortfall in *frames* (``ratio * decided - offloaded``), the
+        effective budget is ``ratio + gain * deficit`` clipped to [0, 1].
+        Because the deficit accumulates, any persistent suppression —
+        however long the congestion lasts — is eventually paid back and the
+        realized ratio converges to the target exactly.
+    congestion : callable or None
+        Zero-arg probe returning the predicted uplink sojourn (queue wait +
+        transmission) at the best edge, in sim time units.  Runtime wiring,
+        never serialized (stripped like the token-bucket clock).
+    """
+
+    context_params = ("congestion",)
+
+    def __init__(
+        self,
+        calibration_scores: np.ndarray,
+        ratio: float,
+        delay_weight: float = 0.5,
+        delay_scale: float = 2.0,
+        gain: float = 0.05,
+        congestion: Optional[Callable[[], float]] = None,
+    ):
+        if delay_scale <= 0.0:
+            raise ValueError(f"delay_scale must be > 0, got {delay_scale}")
+        self._cal = np.sort(np.asarray(calibration_scores, np.float64))
+        self.delay_weight = float(delay_weight)
+        self.delay_scale = float(delay_scale)
+        self.gain = float(gain)
+        self.congestion = congestion
+        self._decided = 0
+        self._offloaded = 0
+        self.set_ratio(ratio)
+
+    def set_ratio(self, ratio: float) -> None:
+        self.ratio = float(np.clip(ratio, 0.0, 1.0))
+
+    def _penalty(self) -> float:
+        d = max(float(self.congestion()), 0.0) if self.congestion is not None else 0.0
+        return self.delay_weight * d / (d + self.delay_scale)
+
+    def _threshold(self) -> float:
+        deficit = self.ratio * self._decided - self._offloaded
+        r_adj = float(np.clip(self.ratio + self.gain * deficit, 0.0, 1.0))
+        # the target ratio's own degenerate budgets stay hard caps: the
+        # controller may not push a ratio-0 stream into offloading
+        if self.ratio <= 0.0:
+            return _NEVER
+        if self.ratio >= 1.0:
+            return _ALWAYS
+        return quantile_threshold(self._cal, r_adj)
+
+    def decide(self, estimate: float) -> bool:
+        off = bool(float(estimate) - self._penalty() > self._threshold())
+        self._decided += 1
+        self._offloaded += int(off)
+        return off
+
+    def decide_batch(self, estimates: np.ndarray) -> np.ndarray:
+        # sequential by construction: the controller state and the live
+        # congestion probe evolve decision to decision
+        return decide_sequential(self, estimates)
+
+    def spec(self) -> Dict[str, Any]:
+        return {
+            "delay_weight": self.delay_weight,
+            "delay_scale": self.delay_scale,
+            "gain": self.gain,
+        }
+
+
+# ----------------------------------------------------------- value iteration
+
+
+def _estimate_bins(calibration_scores: np.ndarray, n_bins: int) -> np.ndarray:
+    """Equiprobable discretization of the calibration score distribution
+    (bin centers at the mid-bin quantiles, each with mass 1/n_bins)."""
+    cal = np.asarray(calibration_scores, np.float64)
+    if cal.size == 0:
+        return np.zeros(n_bins)
+    qs = (np.arange(n_bins) + 0.5) / n_bins
+    return np.quantile(cal, qs)
+
+
+def _vi_sweep_body(V, e_bins, lam, delay_cost, slow, P, gamma, q_off, q_loc):
+    """One Bellman sweep over the whole (Q+1, 2) state space, vectorized.
+
+    With ``relu(x) = max(x, 0)`` the backup has the closed form
+    ``V(q,c) = E_e[relu(e - theta(q,c))] + gamma * EV_local(q,c)`` where
+    ``theta`` is the indifference threshold — exactly the per-state decision
+    rule the policy serves with.
+    """
+    import jax.numpy as jnp
+
+    EV = V @ P.T                                   # (Q+1, 2): E_{c'}[V | c]
+    EV_off = EV[q_off]                             # next-state values, offload
+    EV_loc = EV[q_loc]                             # next-state values, local
+    q_idx = jnp.arange(V.shape[0], dtype=V.dtype)
+    theta = (
+        lam
+        + delay_cost * (q_idx + 1.0)[:, None] * slow[None, :]
+        + gamma * (EV_loc - EV_off)
+    )
+    gain = jnp.mean(
+        jnp.maximum(e_bins[:, None, None] - theta[None, :, :], 0.0), axis=0
+    )
+    return gain + gamma * EV_loc, theta
+
+
+def solve_value_iteration(
+    e_bins: np.ndarray,
+    lam: float,
+    *,
+    max_queue: int = 16,
+    delay_cost: float = 0.05,
+    bad_slowdown: float = 4.0,
+    p_gb: float = 0.1,
+    p_bg: float = 0.3,
+    gamma: float = 0.9,
+    n_sweeps: int = 64,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Value-iterate the (queue depth × channel) offloading MDP.
+
+    Returns ``(V, theta)`` with shapes ``(max_queue+1, 2)``: the value table
+    and the per-state offload thresholds.  The whole solve is one jitted
+    ``lax.scan`` over ``n_sweeps`` Bellman sweeps; every sweep updates all
+    states as vectorized array ops — there is no per-state Python loop.
+    """
+    import jax.numpy as jnp
+
+    _ensure_jit()
+    Q = int(max_queue)
+    q_idx = np.arange(Q + 1)
+    args = (
+        jnp.asarray(e_bins, jnp.float32),
+        jnp.float32(lam),
+        jnp.float32(delay_cost),
+        jnp.asarray([1.0, float(bad_slowdown)], jnp.float32),
+        jnp.asarray(
+            [[1.0 - p_gb, p_gb], [p_bg, 1.0 - p_bg]], jnp.float32
+        ),
+        jnp.float32(gamma),
+        jnp.asarray(np.minimum(q_idx + 1, Q), jnp.int32),
+        jnp.asarray(np.maximum(q_idx - 1, 0), jnp.int32),
+    )
+    V, theta = _solve_jit(*args, n_sweeps=int(n_sweeps))
+    return np.asarray(V, np.float64), np.asarray(theta, np.float64)
+
+
+def _solve_impl(e_bins, lam, delay_cost, slow, P, gamma, q_off, q_loc, *, n_sweeps):
+    import jax
+    import jax.numpy as jnp
+
+    def sweep(V, _):
+        V_new, theta = _vi_sweep_body(
+            V, e_bins, lam, delay_cost, slow, P, gamma, q_off, q_loc
+        )
+        return V_new, None
+
+    V0 = jnp.zeros((q_off.shape[0], 2), jnp.float32)
+    V, _ = jax.lax.scan(sweep, V0, None, length=n_sweeps)
+    _, theta = _vi_sweep_body(
+        V, e_bins, lam, delay_cost, slow, P, gamma, q_off, q_loc
+    )
+    return V, theta
+
+
+_solve_jit = None  # populated lazily so importing netsim never pays jax startup
+_SWEEP_JIT = {}  # n_sweeps -> persistent jitted vmapped solver (cache hits warm)
+
+
+def _sweep_solver(n_sweeps: int):
+    """Jitted ``vmap`` of the scan solver over the price axis, cached per
+    ``n_sweeps`` so repeated sweeps retrace only on shape changes — a fresh
+    ``jax.jit`` per call would recompile every time."""
+    fn = _SWEEP_JIT.get(n_sweeps)
+    if fn is None:
+        import jax
+
+        def theta_fn(e_bins, lam, delay_cost, slow, P, gamma, q_off, q_loc):
+            return _solve_impl(
+                e_bins, lam, delay_cost, slow, P, gamma, q_off, q_loc,
+                n_sweeps=n_sweeps,
+            )[1]
+
+        fn = jax.jit(
+            jax.vmap(theta_fn, in_axes=(None, 0, None, None, None, None, None, None))
+        )
+        _SWEEP_JIT[n_sweeps] = fn
+    return fn
+
+
+def value_iteration_sweep(
+    calibration_scores: np.ndarray,
+    ratios: Sequence[float],
+    *,
+    n_bins: int = 32,
+    max_queue: int = 16,
+    delay_cost: float = 0.05,
+    bad_slowdown: float = 4.0,
+    p_gb: float = 0.1,
+    p_bg: float = 0.3,
+    gamma: float = 0.9,
+    n_sweeps: int = 64,
+) -> np.ndarray:
+    """Per-state thresholds for a whole ratio grid in one device call:
+    ``vmap`` of the jitted scan over the ratio-derived offload prices.
+    Returns ``theta`` of shape ``(len(ratios), max_queue+1, 2)``."""
+    import jax.numpy as jnp
+
+    e_bins = _estimate_bins(calibration_scores, n_bins)
+    lams = np.asarray(
+        [quantile_threshold(calibration_scores, r) for r in ratios], np.float32
+    )
+    Q = int(max_queue)
+    q_idx = np.arange(Q + 1)
+    fixed = (
+        jnp.asarray(e_bins, jnp.float32),
+        jnp.float32(delay_cost),
+        jnp.asarray([1.0, float(bad_slowdown)], jnp.float32),
+        jnp.asarray([[1.0 - p_gb, p_gb], [p_bg, 1.0 - p_bg]], jnp.float32),
+        jnp.float32(gamma),
+        jnp.asarray(np.minimum(q_idx + 1, Q), jnp.int32),
+        jnp.asarray(np.maximum(q_idx - 1, 0), jnp.int32),
+    )
+    batched = _sweep_solver(int(n_sweeps))
+    return np.asarray(
+        np.asarray(batched(fixed[0], jnp.asarray(lams), *fixed[1:])), np.float64
+    )
+
+
+def value_iteration_ref(
+    e_bins: np.ndarray,
+    lam: float,
+    *,
+    max_queue: int = 16,
+    delay_cost: float = 0.05,
+    bad_slowdown: float = 4.0,
+    p_gb: float = 0.1,
+    p_bg: float = 0.3,
+    gamma: float = 0.9,
+    n_sweeps: int = 64,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pure-Python per-state reference solver (the benchmark baseline and
+    the correctness oracle for the jitted scan)."""
+    e = np.asarray(e_bins, np.float64)
+    Q = int(max_queue)
+    slow = [1.0, float(bad_slowdown)]
+    P = [[1.0 - p_gb, p_gb], [p_bg, 1.0 - p_bg]]
+    V = np.zeros((Q + 1, 2))
+
+    def backup(V):
+        theta = np.zeros_like(V)
+        V_new = np.zeros_like(V)
+        for q in range(Q + 1):
+            for c in range(2):
+                ev_off = sum(P[c][c2] * V[min(q + 1, Q), c2] for c2 in range(2))
+                ev_loc = sum(P[c][c2] * V[max(q - 1, 0), c2] for c2 in range(2))
+                th = lam + delay_cost * (q + 1) * slow[c] + gamma * (ev_loc - ev_off)
+                theta[q, c] = th
+                V_new[q, c] = float(np.mean(np.maximum(e - th, 0.0))) + gamma * ev_loc
+        return V_new, theta
+
+    theta = np.zeros_like(V)
+    for _ in range(n_sweeps):
+        V, _ = backup(V)
+    _, theta = backup(V)
+    return V, theta
+
+
+def _ensure_jit() -> None:
+    global _solve_jit
+    if _solve_jit is None:
+        import jax
+
+        _solve_jit = jax.jit(_solve_impl, static_argnames=("n_sweeps",))
+
+
+@register_policy("value_iteration")
+class ValueIterationPolicy:
+    """Serve-time MDP controller: offload iff estimate > ``theta[q, c]``.
+
+    The threshold table comes from :func:`solve_value_iteration` (one jitted
+    scan at construction / ``set_ratio``); ``state_probe`` is the runtime-
+    injected zero-arg callable returning the observed ``(queue_depth,
+    channel_state)`` at decision time.  Without a probe the policy serves
+    from the ``(0, good)`` state — plain threshold behavior.
+    """
+
+    context_params = ("state_probe",)
+
+    def __init__(
+        self,
+        calibration_scores: np.ndarray,
+        ratio: float,
+        max_queue: int = 16,
+        delay_cost: float = 0.05,
+        bad_slowdown: float = 4.0,
+        p_gb: float = 0.1,
+        p_bg: float = 0.3,
+        gamma: float = 0.9,
+        n_sweeps: int = 64,
+        n_bins: int = 32,
+        state_probe: Optional[Callable[[], Tuple[int, int]]] = None,
+    ):
+        _ensure_jit()
+        self._cal = np.asarray(calibration_scores, np.float64)
+        self.max_queue = int(max_queue)
+        self.delay_cost = float(delay_cost)
+        self.bad_slowdown = float(bad_slowdown)
+        self.p_gb = float(p_gb)
+        self.p_bg = float(p_bg)
+        self.gamma = float(gamma)
+        self.n_sweeps = int(n_sweeps)
+        self.n_bins = int(n_bins)
+        self.state_probe = state_probe
+        self._e_bins = _estimate_bins(self._cal, self.n_bins)
+        self.set_ratio(ratio)
+
+    def set_ratio(self, ratio: float) -> None:
+        self.ratio = float(np.clip(ratio, 0.0, 1.0))
+        lam = quantile_threshold(self._cal, self.ratio)
+        _, self.theta = solve_value_iteration(
+            self._e_bins,
+            lam,
+            max_queue=self.max_queue,
+            delay_cost=self.delay_cost,
+            bad_slowdown=self.bad_slowdown,
+            p_gb=self.p_gb,
+            p_bg=self.p_bg,
+            gamma=self.gamma,
+            n_sweeps=self.n_sweeps,
+        )
+
+    def _state(self) -> Tuple[int, int]:
+        if self.state_probe is None:
+            return 0, 0
+        q, c = self.state_probe()
+        return min(max(int(q), 0), self.max_queue), int(np.clip(int(c), 0, 1))
+
+    def decide(self, estimate: float) -> bool:
+        q, c = self._state()
+        return bool(float(estimate) > self.theta[q, c])
+
+    def decide_batch(self, estimates: np.ndarray) -> np.ndarray:
+        # the probed state evolves as upstream dispatch fills queues, so
+        # batches decide sequentially like the other stateful policies
+        return decide_sequential(self, estimates)
+
+    def spec(self) -> Dict[str, Any]:
+        return {
+            "max_queue": self.max_queue,
+            "delay_cost": self.delay_cost,
+            "bad_slowdown": self.bad_slowdown,
+            "p_gb": self.p_gb,
+            "p_bg": self.p_bg,
+            "gamma": self.gamma,
+            "n_sweeps": self.n_sweeps,
+            "n_bins": self.n_bins,
+        }

@@ -7,7 +7,9 @@ The engine (repro.api) is the fitted decision artifact; this package is the
   scoring through the fused Pallas path, arrival-order policy state,
   rolling telemetry, mid-stream ``set_ratio``),
 - :class:`EdgeWorker` / :class:`EdgeLatencyModel` — a constrained edge
-  server (capacity, clock-driven token-bucket rate limit, latency model),
+  server (capacity, clock-driven token-bucket rate limit, latency model,
+  optional ``link=`` uplink front-end from :mod:`repro.netsim` with a
+  bounded FIFO queue and per-frame :class:`LatencyBreakdown`),
 - :class:`MultiEdgeDispatcher` — routes accepted offloads across a
   heterogeneous fleet (``round_robin`` / ``least_loaded`` /
   ``score_weighted``) with drop-or-degrade on saturation,
@@ -27,12 +29,18 @@ from repro.runtime.dispatch import (
     MultiEdgeDispatcher,
     list_strategies,
 )
-from repro.runtime.edge import CompletedJob, EdgeLatencyModel, EdgeWorker
+from repro.runtime.edge import (
+    CompletedJob,
+    EdgeLatencyModel,
+    EdgeWorker,
+    LatencyBreakdown,
+)
 from repro.runtime.session import OffloadSession, SessionTelemetry, StepDecision
 from repro.runtime.simulate import (
     OffloadRuntime,
     StepRecord,
     StreamTrace,
+    default_congested_fleet,
     default_edge_fleet,
     simulate,
 )
@@ -44,6 +52,7 @@ __all__ = [
     "StepDecision",
     "EdgeWorker",
     "EdgeLatencyModel",
+    "LatencyBreakdown",
     "CompletedJob",
     "MultiEdgeDispatcher",
     "DispatchResult",
@@ -56,5 +65,6 @@ __all__ = [
     "StepRecord",
     "StreamTrace",
     "default_edge_fleet",
+    "default_congested_fleet",
     "simulate",
 ]

@@ -18,7 +18,10 @@ class ManualClock:
         return self.t
 
     def advance(self, dt: float) -> float:
-        if dt < 0:
-            raise ValueError(f"clock cannot go backwards (dt={dt})")
-        self.t += float(dt)
+        dt = float(dt)
+        # NaN poisons every downstream schedule silently; `not (dt >= 0)`
+        # catches it along with negative steps
+        if not (dt >= 0):
+            raise ValueError(f"clock cannot go backwards or take NaN (dt={dt})")
+        self.t += dt
         return self.t

@@ -6,8 +6,11 @@ Strategies (``list_strategies()``):
 - ``round_robin``   — rotate through the fleet, take the first that admits,
 - ``least_loaded``  — prefer the lowest in-flight/capacity fraction,
 - ``score_weighted``— seeded sampling of the probe order with weights
-  ``free_slots / expected_latency``, so fast idle edges absorb most traffic
-  while loaded ones still get a share (power-of-choices flavor).
+  ``free_slots / expected_latency`` sharpened by the frame's reward
+  estimate (high-value frames concentrate on the fastest free edges,
+  low-value frames spread for load balance), so fast idle edges absorb
+  most traffic while loaded ones still get a share (power-of-choices
+  flavor).
 
 When no edge admits a frame, the saturation policy decides its fate:
 ``degrade`` serves the weak result locally (frame is answered, quality
@@ -21,7 +24,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.runtime.edge import EdgeWorker
+from repro.runtime.edge import EdgeWorker, LatencyBreakdown
 
 _STRATEGIES = ("round_robin", "least_loaded", "score_weighted")
 _ON_SATURATION = ("degrade", "drop")
@@ -40,13 +43,16 @@ def list_strategies() -> List[str]:
 
 @dataclass(frozen=True)
 class DispatchResult:
-    """Where one accepted offload went (or why it didn't)."""
+    """Where one accepted offload went (or why it didn't).  ``breakdown``
+    decomposes the latency of admitted frames into uplink queue wait,
+    transmission, and edge service (pure service on link-free edges)."""
 
     step: int
     estimate: float
     edge: Optional[str]
     latency: Optional[float]
     outcome: str
+    breakdown: Optional[LatencyBreakdown] = None
 
 
 class MultiEdgeDispatcher:
@@ -93,7 +99,11 @@ class MultiEdgeDispatcher:
         if self.strategy == "least_loaded":
             return sorted(range(n), key=lambda i: (self.edges[i].load, i))
         # score_weighted: seeded sampling without replacement, weight =
-        # free slots per unit of expected latency
+        # free slots per unit of expected latency, sharpened by the frame's
+        # reward estimate — exponent 1 + clip(estimate, 0, 1), so a
+        # high-value frame concentrates its probe order on the best edges
+        # while a low-value frame spreads more evenly (weights are
+        # normalized, so only a *shape* change can use the estimate)
         w = np.array(
             [
                 max(e.capacity - e.inflight, 0) / max(e.expected_latency(), 1e-9)
@@ -104,10 +114,11 @@ class MultiEdgeDispatcher:
         pos = np.flatnonzero(w > 0.0)
         if pos.size == 0:
             return list(range(n))
+        sharp = w[pos] ** (1.0 + float(np.clip(estimate, 0.0, 1.0)))
         order = [
             int(i)
             for i in self._rng.choice(
-                pos, size=pos.size, replace=False, p=w[pos] / w[pos].sum()
+                pos, size=pos.size, replace=False, p=sharp / sharp.sum()
             )
         ]
         # saturated edges last, in index order (their buckets may still admit
@@ -124,6 +135,7 @@ class MultiEdgeDispatcher:
                 return DispatchResult(
                     step=step, estimate=estimate, edge=self.edges[i].name,
                     latency=lat, outcome=OUTCOME_OFFLOADED,
+                    breakdown=self.edges[i].last_breakdown,
                 )
         if self.on_saturation == "degrade":
             self.degraded += 1

@@ -12,7 +12,12 @@ the strong detector's side of the link:
   wall clock),
 - **latency model**: completion time ``base + per_inflight * load`` plus
   seeded jitter, so heterogeneous edges (fast/near vs big/far) and load-
-  dependent queueing are expressible.
+  dependent queueing are expressible,
+- **link** (optional): a :class:`repro.netsim.NetworkLink` fronted by a
+  bounded FIFO :class:`repro.netsim.UplinkQueue` — offloads first queue for
+  and occupy the device→edge uplink, then run on the edge, so every
+  admitted frame's latency decomposes into queue + transmit + service
+  (surfaced as :class:`LatencyBreakdown` and stamped onto dispatch traces).
 
 All timekeeping flows through the ``now`` argument of ``poll``/``try_admit``
 — the worker is fully deterministic under a seeded driver.
@@ -21,7 +26,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -37,11 +42,36 @@ class EdgeLatencyModel:
     per_inflight: float = 0.0
     jitter: float = 0.0
 
+    def __post_init__(self) -> None:
+        for name in ("base", "per_inflight", "jitter"):
+            v = getattr(self, name)
+            if not np.isfinite(v) or v < 0.0:
+                raise ValueError(
+                    f"EdgeLatencyModel.{name} must be finite and >= 0, got {v}"
+                )
+
     def sample(self, inflight: int, rng: np.random.Generator) -> float:
         lat = self.base + self.per_inflight * inflight
         if self.jitter > 0.0:
             lat += self.jitter * float(rng.uniform())
         return lat
+
+
+@dataclass(frozen=True)
+class LatencyBreakdown:
+    """Where one offload's latency went: uplink queue wait, transmission,
+    and edge service.  Link-free edges report pure service."""
+
+    queue: float
+    transmit: float
+    service: float
+
+    @property
+    def total(self) -> float:
+        return self.queue + self.transmit + self.service
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"queue": self.queue, "transmit": self.transmit, "service": self.service}
 
 
 @dataclass(frozen=True)
@@ -69,6 +99,18 @@ class EdgeWorker:
     burst : float
         Token-bucket depth (burst tolerance) when ``rate`` is set.
     latency : EdgeLatencyModel
+    link : repro.netsim.NetworkLink or None
+        Optional uplink model.  When set, every admission first traverses a
+        bounded FIFO :class:`repro.netsim.UplinkQueue` over this link:
+        admission can additionally fail because the uplink queue is full
+        (``queue_depth``), and the returned latency is queue wait +
+        transmission + service (breakdown in ``last_breakdown``).
+    queue_depth : int
+        Uplink queue bound (frames queued-or-transmitting) when ``link`` is
+        set.
+    frame_bits : float
+        Default offloaded-frame size on the link (``try_admit`` may
+        override per frame).
     seed : int
         Seeds the jitter stream; two workers with equal config + seed are
         step-for-step identical.
@@ -82,6 +124,9 @@ class EdgeWorker:
         rate: Optional[float] = None,
         burst: float = 4.0,
         latency: Optional[EdgeLatencyModel] = None,
+        link: Optional["NetworkLink"] = None,
+        queue_depth: int = 16,
+        frame_bits: float = 1.0,
         seed: int = 0,
     ):
         if capacity < 1:
@@ -89,6 +134,15 @@ class EdgeWorker:
         self.name = str(name)
         self.capacity = int(capacity)
         self.latency = latency if latency is not None else EdgeLatencyModel()
+        if link is not None:
+            from repro.netsim.queue import UplinkQueue
+
+            self.uplink: Optional[UplinkQueue] = UplinkQueue(
+                link, depth=queue_depth, frame_bits=frame_bits
+            )
+        else:
+            self.uplink = None
+        self.last_breakdown: Optional[LatencyBreakdown] = None
         self._rng = np.random.default_rng(seed)
         self._now = 0.0
         # min-heap of (t_done, step, t_admit); admit time rides in the entry
@@ -116,6 +170,8 @@ class EdgeWorker:
     def poll(self, now: float) -> List[CompletedJob]:
         """Complete every in-flight offload with finish time <= ``now``."""
         self._advance(now)
+        if self.uplink is not None:
+            self.uplink.poll(self._now)
         done: List[CompletedJob] = []
         while self._inflight and self._inflight[0][0] <= self._now:
             t_done, step, t_admit = heapq.heappop(self._inflight)
@@ -138,21 +194,73 @@ class EdgeWorker:
         return len(self._inflight) / self.capacity
 
     def expected_latency(self) -> float:
-        """Deterministic part of the next job's latency (dispatch weighting)."""
-        return self.latency.base + self.latency.per_inflight * len(self._inflight)
+        """Deterministic part of the next job's latency (dispatch weighting);
+        includes the predicted uplink sojourn on link-fronted edges."""
+        service = self.latency.base + self.latency.per_inflight * len(self._inflight)
+        if self.uplink is not None:
+            service += self.uplink.predicted_sojourn(self._now)
+        return service
 
-    def try_admit(self, now: float, step: int, estimate: float) -> Optional[float]:
+    def predicted_uplink_delay(self, now: float) -> float:
+        """Predicted uplink *queueing* wait for a frame offered now — the
+        avoidable part of the sojourn (a frame's own transmission is paid
+        regardless of when it offloads).  0 on link-free edges.  The
+        congestion signal queue-aware policies discount by."""
+        if self.uplink is None:
+            return 0.0
+        return self.uplink.predicted_wait(max(self._now, float(now)))
+
+    def uplink_state(self, now: float) -> Tuple[int, int]:
+        """Observed ``(queue_depth, channel_state)`` at ``now`` — the MDP
+        state the ``value_iteration`` policy conditions on.  Link-free edges
+        report ``(0, good)``."""
+        if self.uplink is None:
+            return 0, 0
+        t = max(self._now, float(now))
+        self.uplink.poll(t)
+        return self.uplink.occupancy, self.uplink.link.state_at(t)
+
+    def try_admit(
+        self,
+        now: float,
+        step: int,
+        estimate: float,
+        size_bits: Optional[float] = None,
+    ) -> Optional[float]:
         """Admit one offload; returns its latency, or ``None`` when the edge
-        refuses (capacity full, or the rate limiter withholds a token).  The
-        estimate is recorded on the trace, not used for admission."""
+        refuses (capacity full, the rate limiter withholds a token, or the
+        uplink queue is full).  The estimate is recorded on the trace, not
+        used for admission.  On success ``last_breakdown`` holds the
+        queue/transmit/service decomposition of the returned latency."""
         self.poll(now)
         if len(self._inflight) >= self.capacity:
+            self.rejected += 1
+            return None
+        # pre-check the uplink BEFORE the rate limiter: a full queue must
+        # not burn a token on a frame it is about to refuse
+        if self.uplink is not None and self.uplink.full(self._now):
             self.rejected += 1
             return None
         if self._bucket is not None and not self._bucket.try_take():
             self.rejected += 1
             return None
-        lat = self.latency.sample(len(self._inflight), self._rng)
+        if self.uplink is not None:
+            frame = self.uplink.enqueue(self._now, int(step), size_bits)
+            if frame is None:  # unreachable: fullness checked at this `now`
+                self.rejected += 1
+                return None
+            service = self.latency.sample(len(self._inflight), self._rng)
+            self.last_breakdown = LatencyBreakdown(
+                queue=frame.queue_delay,
+                transmit=frame.transmit_delay,
+                service=service,
+            )
+            lat = (frame.t_delivered - self._now) + service
+        else:
+            lat = self.latency.sample(len(self._inflight), self._rng)
+            self.last_breakdown = LatencyBreakdown(
+                queue=0.0, transmit=0.0, service=lat
+            )
         heapq.heappush(self._inflight, (self._now + lat, int(step), self._now))
         self.accepted += 1
         return lat
@@ -160,10 +268,13 @@ class EdgeWorker:
     # ----------------------------------------------------------------- stats
 
     def stats(self) -> Dict[str, Any]:
-        return {
+        out = {
             "capacity": self.capacity,
             "accepted": self.accepted,
             "rejected": self.rejected,
             "completed": len(self.completed),
             "inflight": len(self._inflight),
         }
+        if self.uplink is not None:
+            out["uplink"] = self.uplink.stats()
+        return out

@@ -26,7 +26,7 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro.api.engine import OffloadEngine
-from repro.api.policies import make_policy
+from repro.api.policies import make_policy, policy_context_params
 
 
 @dataclass(frozen=True)
@@ -87,6 +87,17 @@ class OffloadSession:
         Injected time source forwarded to time-based policies
         (``token_bucket``); ignored by stateless policies.  Never the wall
         clock in tests/simulations — see ``repro.runtime.clock.ManualClock``.
+    congestion : callable or None
+        Zero-arg probe of the predicted uplink sojourn at the best edge,
+        forwarded to policies that declare it (``queue_aware``); wired by
+        ``OffloadRuntime.open_session`` from its link-fronted fleet.
+    state_probe : callable or None
+        Zero-arg probe of the observed ``(queue_depth, channel_state)``,
+        forwarded to policies that declare it (``value_iteration``).
+
+    Each injected callable reaches the policy constructor only when the
+    policy's ``context_params`` declares it — runtime wiring, never part of
+    the engine artifact.
     """
 
     def __init__(
@@ -97,6 +108,8 @@ class OffloadSession:
         micro_batch: int = 8,
         telemetry_window: int = 64,
         clock: Optional[Callable[[], float]] = None,
+        congestion: Optional[Callable[[], float]] = None,
+        state_probe: Optional[Callable[[], tuple]] = None,
     ):
         if engine.calibration_scores is None:
             raise RuntimeError("OffloadSession over an unfitted engine")
@@ -104,8 +117,11 @@ class OffloadSession:
         self.micro_batch = max(int(micro_batch), 1)
         self._ratio = float(engine.ratio if ratio is None else ratio)
         kwargs = dict(engine.policy_kwargs)
-        if clock is not None and engine.policy_name == "token_bucket":
-            kwargs["clock"] = clock
+        accepted = set(policy_context_params(engine.policy_name))
+        context = {"clock": clock, "congestion": congestion, "state_probe": state_probe}
+        kwargs.update(
+            {k: v for k, v in context.items() if v is not None and k in accepted}
+        )
         self.policy = make_policy(
             engine.policy_name, engine.calibration_scores, self._ratio, **kwargs
         )

@@ -34,7 +34,13 @@ from repro.runtime.session import OffloadSession, SessionTelemetry, StepDecision
 
 @dataclass(frozen=True)
 class StepRecord:
-    """One frame's full serve-time story, in arrival order."""
+    """One frame's full serve-time story, in arrival order.
+
+    For offloaded frames the latency decomposes exactly:
+    ``latency == queue_delay + transmit_delay + service_delay`` (the uplink
+    queue wait, the transmission over the link, and the edge service time —
+    the first two are 0 on link-free edges).  Non-offloaded frames carry
+    ``None`` for all three."""
 
     step: int
     t_arrival: float
@@ -44,6 +50,9 @@ class StepRecord:
     edge: Optional[str]
     latency: Optional[float]
     outcome: str
+    queue_delay: Optional[float] = None
+    transmit_delay: Optional[float] = None
+    service_delay: Optional[float] = None
 
     def as_dict(self) -> Dict[str, Any]:
         return {
@@ -55,6 +64,9 @@ class StepRecord:
             "edge": self.edge,
             "latency": self.latency,
             "outcome": self.outcome,
+            "queue_delay": self.queue_delay,
+            "transmit_delay": self.transmit_delay,
+            "service_delay": self.service_delay,
         }
 
 
@@ -77,6 +89,19 @@ class StreamTrace:
         dropped frames are False — they never reached the strong model)."""
         return np.array([r.outcome == OUTCOME_OFFLOADED for r in self.records])
 
+    def latency_decomposition(self) -> Optional[Dict[str, float]]:
+        """Mean queue/transmit/service components over the offloaded frames
+        (``None`` when nothing was offloaded)."""
+        rows = [
+            (r.queue_delay, r.transmit_delay, r.service_delay)
+            for r in self.records
+            if r.queue_delay is not None
+        ]
+        if not rows:
+            return None
+        q, t, s = (float(np.mean(col)) for col in zip(*rows))
+        return {"queue": q, "transmit": t, "service": s, "total": q + t + s}
+
     def summary(self) -> Dict[str, Any]:
         lats = [r.latency for r in self.records if r.latency is not None]
         return {
@@ -85,6 +110,7 @@ class StreamTrace:
             "telemetry": self.telemetry.as_dict(),
             "dispatcher": self.dispatcher,
             "mean_offload_latency": float(np.mean(lats)) if lats else None,
+            "latency_decomposition": self.latency_decomposition(),
         }
 
 
@@ -101,6 +127,46 @@ def default_edge_fleet(n: int = 3, seed: int = 0) -> List[EdgeWorker]:
     ]
     return [
         EdgeWorker(f"edge{i}", seed=seed + i, **profiles[i % len(profiles)])
+        for i in range(n)
+    ]
+
+
+def default_congested_fleet(
+    n: int = 3,
+    seed: int = 0,
+    *,
+    transmit_time: float = 5.0,
+    queue_depth: int = 12,
+    p_gb: float = 0.08,
+    p_bg: float = 0.25,
+    bad_slowdown: float = 4.0,
+) -> List[EdgeWorker]:
+    """A seeded fleet behind congested Gilbert–Elliott uplinks — the netsim
+    acceptance scenario.  Each edge's link pushes one frame in
+    ``transmit_time`` time units in the good state and ``bad_slowdown``×
+    that in fades, so with frames arriving every time unit the uplink
+    queues genuinely build and queue-aware policies have something to see.
+    Service itself is fast (the bottleneck is the link, as in the paper's
+    rate-constrained setting)."""
+    from repro.netsim import GilbertElliottLink
+
+    return [
+        EdgeWorker(
+            f"edge{i}",
+            capacity=queue_depth + 4,
+            latency=EdgeLatencyModel(base=0.2, per_inflight=0.02, jitter=0.02),
+            link=GilbertElliottLink(
+                bandwidth=1.0 / transmit_time,
+                bad_bandwidth=1.0 / (transmit_time * bad_slowdown),
+                p_gb=p_gb,
+                p_bg=p_bg,
+                slot=1.0,
+                seed=seed * 101 + i,
+            ),
+            queue_depth=queue_depth,
+            frame_bits=1.0,
+            seed=seed + i,
+        )
         for i in range(n)
     ]
 
@@ -123,6 +189,24 @@ class OffloadRuntime:
         )
         self.clock = ManualClock()
 
+    def _best_edge(self) -> EdgeWorker:
+        """The edge a new offload would most plausibly land on: the one
+        with the smallest predicted uplink sojourn (ties by fleet order)."""
+        edges = self.dispatcher.edges
+        now = self.clock()
+        return min(edges, key=lambda e: e.predicted_uplink_delay(now))
+
+    def _congestion(self) -> float:
+        """Predicted uplink queueing wait at the best edge right now — how
+        long a frame offloaded at this instant would sit behind others
+        before its own transmission starts.  0 for link-free fleets."""
+        return self._best_edge().predicted_uplink_delay(self.clock())
+
+    def _state_probe(self):
+        """Observed (queue depth, channel state) at the best edge — the MDP
+        state ``value_iteration`` policies condition on."""
+        return self._best_edge().uplink_state(self.clock())
+
     def open_session(
         self,
         *,
@@ -131,13 +215,17 @@ class OffloadRuntime:
         telemetry_window: int = 64,
     ) -> OffloadSession:
         """A new per-stream session sharing the frozen engine; time-based
-        policies see the runtime's manual clock."""
+        policies see the runtime's manual clock, and queue-aware policies
+        (``queue_aware`` / ``value_iteration``) see live congestion probes
+        over the runtime's fleet."""
         return OffloadSession(
             self.engine,
             ratio=ratio,
             micro_batch=micro_batch,
             telemetry_window=telemetry_window,
             clock=self.clock,
+            congestion=self._congestion,
+            state_probe=self._state_probe,
         )
 
     # ------------------------------------------------------------- streaming
@@ -181,11 +269,15 @@ class OffloadRuntime:
                 res: DispatchResult = self.dispatcher.dispatch(
                     now, d.step, d.estimate
                 )
+                bd = res.breakdown
                 records.append(
                     StepRecord(
                         step=d.step, t_arrival=t_arrival[d.step], t_decision=now,
                         estimate=d.estimate, offload=True, edge=res.edge,
                         latency=res.latency, outcome=res.outcome,
+                        queue_delay=bd.queue if bd is not None else None,
+                        transmit_delay=bd.transmit if bd is not None else None,
+                        service_delay=bd.service if bd is not None else None,
                     )
                 )
 

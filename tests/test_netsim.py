@@ -1,0 +1,583 @@
+"""repro.netsim: link models, the uplink queue, queue-aware policies, and
+their integration with the serving runtime (EdgeWorker link front-ends,
+per-step latency decomposition, the seeded congestion scenario)."""
+import numpy as np
+import pytest
+
+from repro.api import MLPRewardModel, OffloadEngine, list_policies, make_policy
+from repro.core import EstimatorConfig
+from repro.netsim import (
+    CHANNEL_BAD,
+    CHANNEL_GOOD,
+    ConstantRateLink,
+    GilbertElliottLink,
+    NetworkLink,
+    TraceBandwidthLink,
+    UplinkQueue,
+    quantile_threshold,
+    solve_value_iteration,
+    value_iteration_ref,
+    value_iteration_sweep,
+)
+from repro.runtime import (
+    OUTCOME_OFFLOADED,
+    EdgeLatencyModel,
+    EdgeWorker,
+    default_congested_fleet,
+    simulate,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - hypothesis is optional (see CI)
+    given = None
+
+
+def synth(n=256, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    rewards = 2.0 * x[:, 0] + 0.3 * rng.normal(size=n)
+    return x, rewards
+
+
+@pytest.fixture(scope="module")
+def fitted_engine():
+    x, rewards = synth()
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(16,), epochs=15, batch_size=64)
+        ),
+        ratio=0.35,
+    )
+    eng.fit(features=x, rewards=rewards)
+    return eng, x
+
+
+# ------------------------------------------------------------------- links
+
+
+def test_constant_rate_link_sizes_delay():
+    link = ConstantRateLink(2.0, propagation=0.5)
+    assert link.transmit_delay(4.0, now=0.0) == pytest.approx(2.5)
+    assert link.transmit_delay(0.0, now=10.0) == pytest.approx(0.5)
+    with pytest.raises(ValueError):
+        ConstantRateLink(0.0)
+    with pytest.raises(ValueError):
+        ConstantRateLink(1.0, propagation=-1.0)
+    with pytest.raises(ValueError):
+        link.transmit_delay(-1.0, 0.0)
+
+
+def test_trace_bandwidth_link_segments():
+    link = TraceBandwidthLink([0.0, 10.0, 20.0], [1.0, 0.5, 2.0])
+    assert link.bandwidth_at(-5.0) == 1.0  # before the trace: first segment
+    assert link.bandwidth_at(5.0) == 1.0
+    assert link.bandwidth_at(10.0) == 0.5  # boundary belongs to the new segment
+    assert link.bandwidth_at(19.9) == 0.5
+    assert link.bandwidth_at(1e9) == 2.0  # last segment holds forever
+    assert link.transmit_delay(1.0, 15.0) == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        TraceBandwidthLink([0.0, 5.0], [1.0])
+    with pytest.raises(ValueError):
+        TraceBandwidthLink([5.0, 0.0], [1.0, 1.0])
+    with pytest.raises(ValueError):
+        TraceBandwidthLink([0.0], [0.0])
+
+
+def test_gilbert_elliott_seeded_and_probe_invariant():
+    """The channel trajectory is a pure function of (seed, slot): probing
+    the future — as queue-delay predictors do — must not perturb it."""
+    a = GilbertElliottLink(1.0, p_gb=0.3, p_bg=0.4, seed=7)
+    b = GilbertElliottLink(1.0, p_gb=0.3, p_bg=0.4, seed=7)
+    assert a.state_at(200.0) in (CHANNEL_GOOD, CHANNEL_BAD)  # far-future probe
+    traj_a = [a.state_at(t) for t in np.arange(0.0, 100.0, 0.5)]
+    traj_b = [b.state_at(t) for t in np.arange(0.0, 100.0, 0.5)]
+    assert traj_a == traj_b
+    assert CHANNEL_BAD in traj_a  # p_gb=0.3 over 100 slots: fades happen
+    bad_bw = a.bad_bandwidth
+    assert bad_bw < a.bandwidth
+    t_bad = next(t for t, s in zip(np.arange(0.0, 100.0, 0.5), traj_a) if s)
+    assert a.bandwidth_at(t_bad) == bad_bw
+    assert a.stationary_bad_fraction() == pytest.approx(0.3 / 0.7)
+
+
+def test_gilbert_elliott_bounded_materialization():
+    """A runaway far-future probe (drain sentinels like t=1e12) raises a
+    clear error instead of materializing unbounded slot history."""
+    link = GilbertElliottLink(1.0, slot=1.0, max_slots=100)
+    assert link.state_at(99.0) in (CHANNEL_GOOD, CHANNEL_BAD)
+    with pytest.raises(ValueError, match="max_slots"):
+        link.state_at(101.0)
+    with pytest.raises(ValueError, match="max_slots"):
+        GilbertElliottLink(1.0, seed=0).bandwidth_at(1e12)
+
+
+def test_gilbert_elliott_validates_params():
+    with pytest.raises(ValueError):
+        GilbertElliottLink(1.0, p_gb=1.5)
+    with pytest.raises(ValueError):
+        GilbertElliottLink(1.0, p_bg=-0.1)
+    with pytest.raises(ValueError):
+        GilbertElliottLink(1.0, slot=0.0)
+    with pytest.raises(ValueError):
+        GilbertElliottLink(1.0, bad_bandwidth=0.0)
+
+
+# ------------------------------------------------------------ uplink queue
+
+
+def test_uplink_queue_fifo_schedule_exact():
+    """Back-to-back frames serialize on the link; the schedule is computed
+    at enqueue and every sojourn decomposes exactly."""
+    q = UplinkQueue(ConstantRateLink(1.0), depth=8, frame_bits=2.0)
+    f0 = q.enqueue(0.0, 0)
+    f1 = q.enqueue(0.5, 1)
+    f2 = q.enqueue(5.0, 2)
+    assert (f0.t_start, f0.t_delivered) == (0.0, 2.0)
+    assert (f1.t_start, f1.t_delivered) == (2.0, 4.0)  # waited for f0
+    assert f1.queue_delay == pytest.approx(1.5)
+    assert (f2.t_start, f2.t_delivered) == (5.0, 7.0)  # link went idle
+    for f in (f0, f1, f2):
+        assert f.sojourn == pytest.approx(f.queue_delay + f.transmit_delay)
+    # enqueue(5.0, ...) advanced the queue's clock past f0/f1 delivery
+    assert q.delivered == [f0, f1]
+    assert q.occupancy == 1
+    assert q.poll(100.0) == [f2]
+
+
+def test_uplink_queue_bounded_depth_drops():
+    q = UplinkQueue(ConstantRateLink(0.1), depth=2, frame_bits=1.0)
+    assert q.enqueue(0.0, 0) is not None
+    assert q.enqueue(0.0, 1) is not None
+    assert q.enqueue(0.0, 2) is None  # full -> dropped, counted
+    assert q.stats()["dropped"] == 1
+    q.poll(1e9)
+    assert q.enqueue(1e9, 3) is not None  # drained -> admits again
+
+
+def test_uplink_queue_predictions_pure():
+    q = UplinkQueue(ConstantRateLink(1.0), depth=8, frame_bits=3.0)
+    assert q.predicted_wait(0.0) == 0.0
+    assert q.predicted_sojourn(0.0) == pytest.approx(3.0)
+    q.enqueue(0.0, 0)
+    before = q.stats()
+    assert q.predicted_wait(1.0) == pytest.approx(2.0)
+    assert q.predicted_sojourn(1.0) == pytest.approx(5.0)
+    assert q.stats() == before  # prediction does not mutate accounting
+
+
+def _random_queue_run(seed: int):
+    """Drive a random config + arrival pattern; return (queue, offered)."""
+    rng = np.random.default_rng(seed)
+    link_kind = rng.integers(0, 3)
+    if link_kind == 0:
+        link = ConstantRateLink(float(rng.uniform(0.2, 3.0)))
+    elif link_kind == 1:
+        times = np.cumsum(rng.uniform(0.5, 3.0, 4)) - 0.5
+        link = TraceBandwidthLink(times, rng.uniform(0.2, 3.0, 4))
+    else:
+        link = GilbertElliottLink(
+            float(rng.uniform(0.5, 3.0)), p_gb=0.2, p_bg=0.3, seed=int(seed)
+        )
+    q = UplinkQueue(link, depth=int(rng.integers(1, 6)), frame_bits=1.0)
+    offered = int(rng.integers(1, 40))
+    t = 0.0
+    for i in range(offered):
+        t += float(rng.uniform(0.0, 1.5))
+        q.enqueue(t, i, float(rng.uniform(0.1, 4.0)))
+    return q, offered
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_uplink_queue_conservation_seeded(seed):
+    """Every offered frame is exactly one of delivered / dropped once the
+    clock passes the last schedule (no frame lost, none double-counted)."""
+    q, offered = _random_queue_run(seed)
+    q.poll(1e12)
+    st = q.stats()
+    assert st["delivered"] + st["dropped"] == offered
+    assert st["occupancy"] == 0
+    # delivered frames left in FIFO order with non-overlapping transmissions
+    delivered = q.delivered
+    for a, b in zip(delivered, delivered[1:]):
+        assert b.t_start >= a.t_delivered - 1e-12
+        assert b.t_enqueue >= a.t_enqueue - 1e-12
+
+
+if given is not None:
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        depth=st.integers(1, 6),
+        bandwidth=st.floats(0.2, 3.0),
+        arrivals=st.lists(
+            st.tuples(st.floats(0.0, 2.0), st.floats(0.0, 4.0)),
+            min_size=1,
+            max_size=40,
+        ),
+    )
+    def test_uplink_queue_conservation_property(depth, bandwidth, arrivals):
+        """Hypothesis form of the conservation law: enqueued + dropped
+        partition the offered frames under arbitrary arrival patterns."""
+        q = UplinkQueue(ConstantRateLink(bandwidth), depth=depth)
+        t = 0.0
+        for i, (gap, size) in enumerate(arrivals):
+            t += gap
+            q.enqueue(t, i, size)
+        q.poll(1e12)
+        st = q.stats()
+        assert st["delivered"] + st["dropped"] == len(arrivals)
+        assert st["delivered"] == st["enqueued"]
+        assert st["occupancy"] == 0
+
+else:  # pragma: no cover - exercised only without hypothesis
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_uplink_queue_conservation_property():
+        pass
+
+
+# -------------------------------------------------------- queue_aware policy
+
+
+def test_queue_aware_registered_and_constructible():
+    assert "queue_aware" in list_policies()
+    assert "value_iteration" in list_policies()
+    cal = np.random.default_rng(0).uniform(0, 1, 200)
+    p = make_policy("queue_aware", cal, 0.3)
+    assert p.spec() == {"delay_weight": 0.5, "delay_scale": 2.0, "gain": 0.05}
+
+
+def test_queue_aware_tracks_ratio_without_congestion():
+    rng = np.random.default_rng(1)
+    cal = rng.uniform(0, 1, 500)
+    p = make_policy("queue_aware", cal, 0.3)
+    mask = p.decide_batch(rng.uniform(0, 1, 1000))
+    assert abs(mask.mean() - 0.3) < 0.05
+
+
+def test_queue_aware_controller_compensates_constant_congestion():
+    """Under *any* constant congestion level the integral controller pulls
+    the realized ratio back to the target — deferral is paid back."""
+    rng = np.random.default_rng(2)
+    cal = rng.uniform(0, 1, 500)
+    for delay in (0.0, 1.0, 5.0, 50.0):
+        p = make_policy("queue_aware", cal, 0.3, congestion=lambda d=delay: d)
+        mask = p.decide_batch(rng.uniform(0, 1, 2000))
+        assert abs(mask.mean() - 0.3) < 0.05, f"delay={delay}"
+
+
+def test_queue_aware_defers_under_congestion_spikes():
+    """A congestion spike suppresses offloads during the spike relative to
+    the calm stretches of the same stream."""
+    rng = np.random.default_rng(3)
+    cal = rng.uniform(0, 1, 500)
+    t = {"i": 0}
+
+    def congestion():
+        return 40.0 if 400 <= t["i"] < 600 else 0.0
+
+    p = make_policy("queue_aware", cal, 0.4, congestion=congestion)
+    decisions = []
+    for e in rng.uniform(0, 1, 1000):
+        decisions.append(p.decide(float(e)))
+        t["i"] += 1
+    d = np.array(decisions)
+    spike, calm = d[400:600].mean(), np.concatenate([d[:400], d[600:]]).mean()
+    assert spike < calm
+    assert abs(d.mean() - 0.4) < 0.06  # overall budget still tracked
+
+
+def test_queue_aware_degenerate_budgets_stay_hard():
+    cal = np.random.default_rng(4).uniform(0, 1, 100)
+    never = make_policy("queue_aware", cal, 0.0)
+    always = make_policy("queue_aware", cal, 1.0)
+    xs = np.linspace(0, 1, 64)
+    assert not never.decide_batch(xs).any()
+    assert always.decide_batch(xs).all()
+
+
+def test_queue_aware_validates_delay_scale():
+    with pytest.raises(ValueError):
+        make_policy("queue_aware", np.zeros(4), 0.3, delay_scale=0.0)
+
+
+# --------------------------------------------------------- value iteration
+
+
+def test_value_iteration_scan_matches_python_ref():
+    e = np.linspace(0.0, 1.0, 16)
+    V1, th1 = solve_value_iteration(e, 0.4, max_queue=8, n_sweeps=40)
+    V2, th2 = value_iteration_ref(e, 0.4, max_queue=8, n_sweeps=40)
+    np.testing.assert_allclose(V1, V2, atol=1e-4)
+    np.testing.assert_allclose(th1, th2, atol=1e-4)
+
+
+def test_value_iteration_thresholds_monotone_in_state():
+    """Deeper queues and the bad channel both demand higher estimates —
+    the qualitative shape the MDP is for."""
+    e = np.linspace(0.0, 1.0, 32)
+    _, theta = solve_value_iteration(e, 0.3, max_queue=10, n_sweeps=60)
+    assert theta.shape == (11, 2)
+    # interior states only: at the truncated top state q=Q the offload
+    # transition min(q+1, Q) self-loops, so its marginal congestion cost
+    # (and hence the threshold) can dip — a boundary artifact, not a bug
+    assert np.all(np.diff(theta[:-1, CHANNEL_GOOD]) > 0)
+    assert np.all(np.diff(theta[:-1, CHANNEL_BAD]) > 0)
+    assert np.all(theta[:, CHANNEL_BAD] >= theta[:, CHANNEL_GOOD])
+
+
+def test_value_iteration_sweep_batches_ratio_grid():
+    cal = np.random.default_rng(5).uniform(0, 1, 400)
+    ratios = [0.1, 0.3, 0.6]
+    thetas = value_iteration_sweep(cal, ratios, max_queue=8, n_sweeps=40)
+    assert thetas.shape == (3, 9, 2)
+    for i, r in enumerate(ratios):
+        single = solve_value_iteration(
+            np.quantile(cal, (np.arange(32) + 0.5) / 32),
+            quantile_threshold(cal, r),
+            max_queue=8,
+            n_sweeps=40,
+        )[1]
+        np.testing.assert_allclose(thetas[i], single, atol=1e-4)
+    # more budget -> lower thresholds, uniformly over states
+    assert np.all(thetas[2] < thetas[0])
+
+
+def test_value_iteration_sweep_rejects_unknown_kwargs():
+    """Misspelled MDP parameters must fail loudly, not silently default."""
+    with pytest.raises(TypeError):
+        value_iteration_sweep(np.linspace(0, 1, 16), [0.3], delay_costs=0.2)
+
+
+def test_value_iteration_policy_conditions_on_state():
+    cal = np.random.default_rng(6).uniform(0, 1, 400)
+    state = {"q": 0, "c": CHANNEL_GOOD}
+    p = make_policy(
+        "value_iteration", cal, 0.4, max_queue=8, n_sweeps=40,
+        state_probe=lambda: (state["q"], state["c"]),
+    )
+    # a borderline estimate offloads from an idle queue, not a deep one
+    border = float((p.theta[0, CHANNEL_GOOD] + p.theta[8, CHANNEL_GOOD]) / 2.0)
+    assert p.decide(border)
+    state["q"] = 8
+    assert not p.decide(border)
+    state["q"] = 0
+    state["c"] = CHANNEL_BAD
+    assert p.theta[0, CHANNEL_BAD] > p.theta[0, CHANNEL_GOOD]
+    p.set_ratio(1.0)
+    assert p.decide(0.0)  # always-offload budget wins in any state
+
+
+# ----------------------------------------------- EdgeWorker link front-end
+
+
+def test_edge_worker_link_breakdown_decomposes():
+    e = EdgeWorker(
+        "e0", capacity=8,
+        latency=EdgeLatencyModel(base=0.5),
+        link=ConstantRateLink(0.5), queue_depth=4, frame_bits=1.0,
+    )
+    lat0 = e.try_admit(0.0, 0, 0.9)
+    bd0 = e.last_breakdown
+    assert lat0 == pytest.approx(2.5)  # transmit 2.0 + service 0.5
+    assert (bd0.queue, bd0.transmit, bd0.service) == (0.0, 2.0, 0.5)
+    lat1 = e.try_admit(0.0, 1, 0.9)
+    bd1 = e.last_breakdown
+    assert bd1.queue == pytest.approx(2.0)  # behind frame 0 on the link
+    assert lat1 == pytest.approx(bd1.total)
+    assert e.stats()["uplink"]["enqueued"] == 2
+
+
+def test_edge_worker_link_queue_full_rejects():
+    e = EdgeWorker(
+        "e0", capacity=100,
+        latency=EdgeLatencyModel(base=0.1),
+        link=ConstantRateLink(0.01), queue_depth=2,
+    )
+    assert e.try_admit(0.0, 0, 0.9) is not None
+    assert e.try_admit(0.0, 1, 0.9) is not None
+    assert e.try_admit(0.0, 2, 0.9) is None  # uplink full, capacity free
+    assert e.stats()["rejected"] == 1
+    # the worker pre-checks fullness, so the queue never saw the frame
+    assert e.stats()["uplink"]["dropped"] == 0
+    assert e.stats()["uplink"]["occupancy"] == 2
+
+
+def test_edge_worker_full_uplink_does_not_burn_rate_token():
+    """A full uplink queue must reject BEFORE the rate limiter spends a
+    token, or the edge's budget drains on frames that were never sent."""
+    e = EdgeWorker(
+        "e0", capacity=100, rate=0.0, burst=2.0,
+        latency=EdgeLatencyModel(base=0.1),
+        link=ConstantRateLink(0.5), queue_depth=1,  # transmit = 2.0
+    )
+    assert e.try_admit(0.0, 0, 0.9) is not None  # spends 1 of 2 burst tokens
+    assert e.try_admit(0.0, 1, 0.9) is None      # queue full: NO token spent
+    # rate=0 never refills: the admit after the queue drains needs the
+    # token the full-queue rejection must have preserved
+    assert e.try_admit(3.0, 2, 0.9) is not None
+    assert e.try_admit(6.0, 3, 0.9) is None  # burst truly exhausted now
+
+
+def test_edge_worker_link_free_breakdown_is_pure_service():
+    e = EdgeWorker("e0", capacity=2, latency=EdgeLatencyModel(base=1.0))
+    lat = e.try_admit(0.0, 0, 0.9)
+    bd = e.last_breakdown
+    assert (bd.queue, bd.transmit) == (0.0, 0.0)
+    assert bd.service == pytest.approx(lat)
+    assert e.predicted_uplink_delay(0.0) == 0.0
+    assert e.uplink_state(0.0) == (0, CHANNEL_GOOD)
+
+
+def test_edge_worker_congestion_probes():
+    e = EdgeWorker(
+        "e0", capacity=8, latency=EdgeLatencyModel(base=0.1),
+        link=ConstantRateLink(0.5), queue_depth=8,
+    )
+    assert e.predicted_uplink_delay(0.0) == 0.0
+    e.try_admit(0.0, 0, 0.9)
+    assert e.predicted_uplink_delay(0.0) == pytest.approx(2.0)
+    assert e.uplink_state(0.0) == (1, CHANNEL_GOOD)
+    assert e.expected_latency() > e.latency.base  # sojourn folded into weight
+    e.poll(10.0)
+    assert e.uplink_state(10.0) == (0, CHANNEL_GOOD)
+
+
+# ----------------------------------------------------- end-to-end scenario
+
+
+def test_simulate_linked_fleet_latency_decomposes(fitted_engine):
+    """Acceptance: every offloaded StepRecord's latency splits exactly into
+    queue + transmit + service."""
+    eng, x = fitted_engine
+    trace = simulate(
+        eng, features=x[:200], edges=default_congested_fleet(3, seed=3),
+        ratio=0.35, micro_batch=1, seed=3,
+    )
+    offloaded = [r for r in trace.records if r.outcome == OUTCOME_OFFLOADED]
+    assert offloaded
+    for r in offloaded:
+        assert r.latency == pytest.approx(
+            r.queue_delay + r.transmit_delay + r.service_delay
+        )
+    locals_ = [r for r in trace.records if r.outcome != OUTCOME_OFFLOADED]
+    assert all(r.queue_delay is None for r in locals_)
+    d = trace.latency_decomposition()
+    assert d is not None and d["total"] == pytest.approx(
+        d["queue"] + d["transmit"] + d["service"]
+    )
+    assert "uplink" in trace.dispatcher["edges"]["edge0"]
+
+
+def test_simulate_linked_fleet_bit_identical(fitted_engine):
+    """Seeded determinism holds through the netsim layer: two runs of the
+    same congested simulation produce identical traces record-for-record."""
+    eng, x = fitted_engine
+
+    def run():
+        return simulate(
+            eng, features=x[:160], edges=default_congested_fleet(3, seed=9),
+            ratio=0.35, micro_batch=4, seed=9,
+        )
+
+    t1, t2 = run(), run()
+    assert t1.records == t2.records
+    assert t1.summary() == t2.summary()
+
+
+def test_queue_aware_beats_threshold_at_equal_ratio(fitted_engine):
+    """The headline acceptance criterion: on the seeded congestion scenario
+    the queue_aware policy strictly reduces mean end-to-end offload latency
+    vs the plain threshold at (approximately) equal realized offload ratio."""
+    eng, x = fitted_engine
+    rng = np.random.default_rng(42)
+    stream = rng.normal(0, 1, (400, x.shape[1])).astype(np.float32)
+
+    qa = simulate(
+        eng.with_policy("queue_aware"), features=stream,
+        edges=default_congested_fleet(3, seed=5), ratio=0.35,
+        micro_batch=1, seed=5,
+    )
+    r_qa = qa.telemetry.realized_ratio
+
+    # threshold run whose realized ratio lands closest to queue_aware's
+    # (the stream's estimate distribution shifts realized off target, so
+    # match empirically over a target grid instead of assuming realized ==
+    # target)
+    def threshold_run(target):
+        return simulate(
+            eng.with_policy("threshold", ratio=target), features=stream,
+            edges=default_congested_fleet(3, seed=5), ratio=target,
+            micro_batch=1, seed=5,
+        )
+
+    runs = [threshold_run(t) for t in (0.30, 0.33, 0.35, 0.38, 0.40)]
+    th = min(runs, key=lambda tr: abs(tr.telemetry.realized_ratio - r_qa))
+    r_th = th.telemetry.realized_ratio
+    assert abs(r_qa - r_th) < 0.02, (r_qa, r_th)
+    lat_qa = qa.summary()["mean_offload_latency"]
+    lat_th = th.summary()["mean_offload_latency"]
+    assert lat_qa < lat_th, (lat_qa, lat_th)
+    # the win comes from the queue component, as it should
+    assert qa.latency_decomposition()["queue"] < th.latency_decomposition()["queue"]
+    # and it is not bought by offloading less: every threshold run at the
+    # same-or-lower realized ratio also pays more latency
+    for tr in runs:
+        if tr.telemetry.realized_ratio <= r_qa + 0.02:
+            assert lat_qa < tr.summary()["mean_offload_latency"]
+
+
+def test_value_iteration_end_to_end_runs(fitted_engine):
+    eng, x = fitted_engine
+    trace = simulate(
+        eng.with_policy(
+            "value_iteration",
+            policy_kwargs=dict(max_queue=12, n_sweeps=40, delay_cost=0.03),
+        ),
+        features=x[:160], edges=default_congested_fleet(3, seed=5),
+        ratio=0.35, micro_batch=1, seed=5,
+    )
+    counts = trace.outcome_counts()
+    assert counts.get(OUTCOME_OFFLOADED, 0) > 0
+    assert sum(counts.values()) == 160
+
+
+# --------------------------------------------------------- engine plumbing
+
+
+def test_engine_with_policy_shares_fit(fitted_engine):
+    eng, x = fitted_engine
+    clone = eng.with_policy("queue_aware", ratio=0.2)
+    assert clone.calibration_scores is eng.calibration_scores
+    assert clone.reward_model is eng.reward_model
+    assert clone.policy_name == "queue_aware" and clone.ratio == 0.2
+    assert eng.policy_name == "threshold" and eng.ratio == 0.35  # untouched
+    with pytest.raises(RuntimeError):
+        OffloadEngine().with_policy("threshold")
+
+
+def test_engine_with_policy_uses_live_policy_ratio(fitted_engine):
+    """Back-compat callers re-budget the policy directly (like save()
+    handles): the clone must inherit the LIVE budget, not the stale one."""
+    eng, _ = fitted_engine
+    base = eng.with_policy("threshold")  # fresh clone to mutate safely
+    base.policy.set_ratio(0.6)  # direct policy re-budget, engine.ratio stale
+    clone = base.with_policy("queue_aware")
+    assert clone.ratio == pytest.approx(0.6)
+
+
+def test_engine_save_strips_context_callables(fitted_engine, tmp_path):
+    """Injected congestion probes are runtime wiring like the token-bucket
+    clock: saving must drop them, loading must rebuild cleanly."""
+    eng, _ = fitted_engine
+    qa = eng.with_policy(
+        "queue_aware", policy_kwargs=dict(congestion=lambda: 0.0, gain=2.0)
+    )
+    path = str(tmp_path / "qa_engine")
+    qa.save(path)
+    loaded = OffloadEngine.load(path)
+    assert loaded.policy_name == "queue_aware"
+    assert "congestion" not in loaded.policy_kwargs
+    assert loaded.policy_kwargs["gain"] == 2.0
+    assert loaded.policy.congestion is None

@@ -192,6 +192,27 @@ def test_manual_clock_monotone():
         clock.advance(-1.0)
 
 
+def test_manual_clock_rejects_nan():
+    """Satellite: NaN would poison every downstream schedule silently."""
+    clock = ManualClock()
+    with pytest.raises(ValueError):
+        clock.advance(float("nan"))
+    assert clock() == 0.0  # the failed advance left time untouched
+
+
+def test_edge_latency_model_validates():
+    """Satellite: negative components are configuration bugs, not models."""
+    for kw in (
+        {"base": -1.0},
+        {"per_inflight": -0.1},
+        {"jitter": -0.5},
+        {"base": float("nan")},
+    ):
+        with pytest.raises(ValueError):
+            EdgeLatencyModel(**kw)
+    assert EdgeLatencyModel(base=0.0).sample(0, np.random.default_rng(0)) == 0.0
+
+
 # ------------------------------------------------------------ edge workers
 
 
@@ -298,6 +319,46 @@ def test_dispatcher_score_weighted_handles_saturated_edges():
     results = [disp.dispatch(0.0, step, 0.9) for step in range(6)]
     assert sum(r.outcome == OUTCOME_OFFLOADED for r in results) == 2
     assert sum(r.outcome == OUTCOME_DEGRADED for r in results) == 4
+
+
+def test_dispatcher_score_weighted_uses_estimate():
+    """Satellite: the estimate sharpens the probe-order weights — a
+    high-value frame concentrates on the fast free edge more often than a
+    low-value frame does (same seed, independent dispatchers)."""
+
+    def first_pick_rate(estimate):
+        edges = [
+            EdgeWorker("fast", capacity=3, latency=EdgeLatencyModel(base=1.0)),
+            EdgeWorker("slow", capacity=1, latency=EdgeLatencyModel(base=3.0)),
+        ]
+        disp = MultiEdgeDispatcher(edges, "score_weighted", seed=123)
+        hits = sum(disp._probe_order(estimate)[0] == 0 for _ in range(400))
+        return hits / 400
+
+    lo, hi = first_pick_rate(0.0), first_pick_rate(1.0)
+    assert hi > lo  # sharper exponent -> best edge leads more often
+    assert hi > 0.85 and 0.6 < lo < 0.95
+
+
+def test_dispatcher_score_weighted_saturation_paths():
+    """Satellite: both saturation paths — all edges full (uniform index
+    order) and a mixed fleet (positive-weight edges sampled first, full
+    edges appended in index order)."""
+    edges = [
+        EdgeWorker(f"e{i}", capacity=1, latency=EdgeLatencyModel(base=100.0))
+        for i in range(3)
+    ]
+    disp = MultiEdgeDispatcher(edges, "score_weighted", seed=0)
+    # mixed path: fill only edge 1; it must come last, others sampled first
+    assert edges[1].try_admit(0.0, 0, 0.9) is not None
+    order = disp._probe_order(0.9)
+    assert order[-1] == 1 and sorted(order[:2]) == [0, 2]
+    # saturated path: fill the rest -> uniform index order fallback
+    assert edges[0].try_admit(0.0, 1, 0.9) is not None
+    assert edges[2].try_admit(0.0, 2, 0.9) is not None
+    assert disp._probe_order(0.9) == [0, 1, 2]
+    # estimates outside [0, 1] (raw-reward engines) must not break sampling
+    assert sorted(disp._probe_order(-3.7)) == [0, 1, 2]
 
 
 def test_dispatcher_score_weighted_deterministic():
