@@ -3,11 +3,14 @@
 #   make install      editable install of src/repro (replaces the PYTHONPATH=src hack)
 #   make test         tier-1 test suite
 #   make bench        benchmark harness (writes artifacts/bench_results.csv)
-#   make bench-smoke  artifact-free benches only (CI; writes bench_results_smoke.csv)
+#   make bench-smoke  artifact-free benches only, incl. the video pipeline
+#                     (CI; writes bench_results_smoke.csv); fails first if a
+#                     bench_* function is missing from the selection registry
+#   make bench-check  just the registry completeness guard
 
 PY ?= python
 
-.PHONY: install test bench bench-smoke
+.PHONY: install test bench bench-smoke bench-check
 
 install:
 	$(PY) -m pip install -e .
@@ -18,5 +21,8 @@ test:
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py
 
-bench-smoke:
+bench-check:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py --check
+
+bench-smoke: bench-check
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py --smoke

@@ -20,13 +20,19 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
   bench_dispatcher_throughput  streaming OffloadRuntime end-to-end frames/s
   bench_netsim_throughput    congested GE-linked fleet frames/s + the
                              value-iteration ref loop vs jitted scan sweep
+  bench_video_pipeline       video tracker-scan fps + stale-result propagate
+                             vs per-frame rematch
   bench_iou                  iou_matrix ref vs Pallas side by side (+ratio)
   bench_kernels              Pallas oracles (jnp path) per-call time
 
 ``--smoke`` runs only the artifact-free benches (batched data plane, engine
-scoring, dispatcher/netsim throughput, kernels) — the CI job.  ``--only
-<substring>`` filters either set by bench name (a dev iteration aid: such
-runs skip the artifact writes below).  Every full run also writes
+scoring, dispatcher/netsim/video throughput, kernels) — the CI job.
+``--only a,b,...`` filters either set by bench name (comma-separated
+substrings, any match; a dev iteration aid: such runs skip the artifact
+writes below).  ``--list`` prints the registered benches per set and
+exits; ``--check`` verifies every module-level ``bench_*`` function is
+registered in the full/smoke selection — CI runs it so a new bench can't
+silently drop out of the smoke allowlist.  Every full run also writes
 ``artifacts/BENCH_<rev>.json`` (per-bench median ms + shapes) so the perf
 trajectory is tracked across commits; CI uploads it as an artifact.
 """
@@ -451,6 +457,48 @@ def bench_iou(n: int = 512, m: int = 512, interpret=None) -> None:
     )
 
 
+def bench_video_pipeline(n_streams: int = 8, n_frames: int = 64) -> None:
+    """The repro.video data plane: jitted tracker-scan throughput over a
+    seeded multi-stream clip, and stale-edge-result ``propagate`` (snap to
+    live tracks) vs the naive per-frame rematch baseline."""
+    from repro.video import (
+        STRONG_PROFILE,
+        WEAK_PROFILE,
+        VideoTracker,
+        generate_clip,
+        propagate_rematch_ref,
+        synthesize_detections,
+        track_clip,
+    )
+
+    clip = generate_clip(n_streams, n_frames, seed=0)
+    weak = synthesize_detections(clip, WEAK_PROFILE, seed=1)
+    strong = synthesize_detections(clip, STRONG_PROFILE, seed=2)
+    track_clip(weak)  # compile the scan
+    frames = n_streams * n_frames
+    us = _timeit(lambda: track_clip(weak), n=5)
+    emit(
+        f"video_tracker_scan_t{n_frames}_b{n_streams}", us / frames,
+        f"frames_per_s={frames / (us / 1e6):.0f}",
+        shape={"frames": n_frames, "streams": n_streams,
+               "max_dets": int(weak.max_boxes)},
+    )
+
+    vt = VideoTracker(n_streams)
+    for t in range(n_frames):
+        vt.update(weak.frame(t))
+    t0, t1 = n_frames - 5, n_frames - 1
+    edge = strong.det(t0, 0)
+    weak_seq = [weak.det(t, 0) for t in range(t0 + 1, t1 + 1)]
+    us_prop = _timeit(lambda: vt.propagate(edge, t0, t1, stream=0), n=20)
+    us_ref = _timeit(lambda: propagate_rematch_ref(edge, weak_seq), n=20)
+    emit(
+        "video_propagate_vs_rematch", us_prop,
+        f"rematch_us={us_ref:.0f};speedup={us_ref / max(us_prop, 1e-9):.1f}x",
+        shape={"staleness": t1 - t0, "edge_dets": len(edge)},
+    )
+
+
 def bench_kernels() -> None:
     import jax.numpy as jnp
 
@@ -495,24 +543,11 @@ def _write_bench_json(smoke: bool) -> str:
     return path
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument(
-        "--smoke", action="store_true",
-        help="artifact-free benches only (batched data plane, engine score, "
-             "dispatcher, kernels)",
-    )
-    ap.add_argument(
-        "--interpret", choices=("auto", "true", "false"), default="auto",
-        help="Pallas execution mode for bench_iou (auto = backend default)",
-    )
-    ap.add_argument(
-        "--only", default=None, metavar="SUBSTRING",
-        help="run only benches whose name contains SUBSTRING "
-             "(applied after --smoke selection)",
-    )
-    args = ap.parse_args(argv)
-    interpret = {"auto": None, "true": True, "false": False}[args.interpret]
+def registered_benches(interpret=None):
+    """The selection registry: (full-run-only, smoke/artifact-free) bench
+    lists.  Every module-level ``bench_*`` function MUST appear in exactly
+    one of them (``--check`` / tests enforce it) — a new bench left out
+    would silently never run in CI."""
     full = [
         ("fig5_context_gain", bench_fig5_context_gain),
         ("fig5_context_cost", bench_fig5_context_cost),
@@ -530,12 +565,77 @@ def main(argv=None) -> None:
         ("engine_score", bench_engine_score),
         ("dispatcher_throughput", bench_dispatcher_throughput),
         ("netsim_throughput", bench_netsim_throughput),
+        ("video_pipeline", bench_video_pipeline),
         ("iou", lambda: bench_iou(interpret=interpret)),
         ("kernels", bench_kernels),
     ]
+    return full, smoke
+
+
+def check_registry() -> List[str]:
+    """Module-level ``bench_*`` functions missing from the selection
+    registry (a registry name is its function name minus the prefix)."""
+    full, smoke = registered_benches()
+    registered = {name for name, _ in full + smoke}
+    return sorted(
+        name
+        for name, fn in globals().items()
+        if name.startswith("bench_")
+        and callable(fn)
+        and name[len("bench_"):] not in registered
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="artifact-free benches only (batched data plane, engine score, "
+             "dispatcher, netsim, video, kernels)",
+    )
+    ap.add_argument(
+        "--interpret", choices=("auto", "true", "false"), default="auto",
+        help="Pallas execution mode for bench_iou (auto = backend default)",
+    )
+    ap.add_argument(
+        "--only", default=None, metavar="NAMES",
+        help="run only benches whose name contains any of the "
+             "comma-separated substrings (applied after --smoke selection)",
+    )
+    ap.add_argument(
+        "--list", action="store_true",
+        help="print the registered benches per selection set and exit",
+    )
+    ap.add_argument(
+        "--check", action="store_true",
+        help="fail if any bench_* function is missing from the selection "
+             "registry (the CI guard)",
+    )
+    args = ap.parse_args(argv)
+    interpret = {"auto": None, "true": True, "false": False}[args.interpret]
+    full, smoke = registered_benches(interpret)
+    if args.check:
+        missing = check_registry()
+        if missing:
+            raise SystemExit(
+                f"benches missing from the registry (add them to "
+                f"registered_benches): {missing}"
+            )
+        print(f"# registry complete: {len(full)} full + {len(smoke)} smoke benches")
+        return
+    if args.list:
+        for label, benches in (("full-only", full), ("smoke", smoke)):
+            for name, _ in benches:
+                print(f"{label},{name}")
+        return
     selected = ([] if args.smoke else full) + smoke
     if args.only is not None:
-        selected = [(name, fn) for name, fn in selected if args.only in name]
+        needles = [s for s in args.only.split(",") if s]
+        selected = [
+            (name, fn)
+            for name, fn in selected
+            if any(s in name for s in needles)
+        ]
         if not selected:
             ap.error(f"--only {args.only!r} matches no bench")
     print("name,us_per_call,derived")

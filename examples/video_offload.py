@@ -1,0 +1,80 @@
+"""Temporal offloading walkthrough: video streams, tracked reward
+propagation, and stale-edge-result reuse.
+
+The paper decides offloading per image; ``repro.video`` turns the decision
+stack stream-level, which is what its deployment setting (a camera feeding
+an edge over a constrained uplink) actually is:
+
+- a seeded synthetic *video* scene (moving shapes, entries/exits/occlusions
+  and scene cuts) with temporally-correlated weak/strong detections,
+- a device-resident tracker — greedy IoU association through the
+  ``iou_matrix`` Pallas kernel inside one jitted ``lax.scan`` — whose
+  ``propagate`` snaps a stale edge result onto the current frame,
+- two temporal policies in the engine registry: ``temporal_hysteresis``
+  (stale-result credit: frames already covered by a fresh edge result are
+  discounted) and ``keyframe`` (offload on scene changes, refractory-
+  spaced),
+- ``VideoRuntime.serve_clip``: netsim links age edge results in flight;
+  every frame's *effective accuracy* (what was actually served, scored by
+  the AP engine) lands on the trace.
+
+Run:  python examples/video_offload.py
+      (after `pip install -e .`, or prefix with PYTHONPATH=src)
+"""
+import numpy as np
+
+from repro.video import (
+    STRONG_PROFILE,
+    WEAK_PROFILE,
+    TrackerConfig,
+    VideoTracker,
+    default_video_scenario,
+    generate_clip,
+    run_video_scenario,
+    synthesize_detections,
+    track_clip,
+)
+
+
+def main() -> None:
+    print("== the raw pieces: a clip and its device-resident tracker ==")
+    clip = generate_clip(2, 24, seed=4)
+    weak = synthesize_detections(clip, WEAK_PROFILE, seed=5)
+    hist = track_clip(weak)  # ONE jitted lax.scan over all 24 frames
+    print(f"  clip: {clip.n_frames} frames x {clip.n_streams} streams,"
+          f" cuts at {np.flatnonzero(clip.cuts[:, 0]).tolist()} (stream 0)")
+    print(f"  tracks alive per frame (stream 0): "
+          f"{hist.n_active[:, 0].tolist()}")
+
+    print("\n== stale-result reuse: propagate an old edge answer forward ==")
+    vt = VideoTracker(2, TrackerConfig())
+    for t in range(24):
+        vt.update(weak.frame(t))
+    strong = synthesize_detections(clip, STRONG_PROFILE, seed=6)
+    edge = strong.det(20, 0)
+    prop = vt.propagate(edge, 20, 23, stream=0)
+    print(f"  edge result from t=20 propagated to t=23: {len(edge)} dets,"
+          f" scores decayed x{vt.config.stale_decay ** 3:.2f}")
+
+    print("\n== the seeded 8-stream congested scenario, three policies ==")
+    scenario = default_video_scenario(8, 96, seed=0)
+    for policy in ("threshold", "temporal_hysteresis", "keyframe"):
+        trace = run_video_scenario(scenario, policy, ratio=0.3)
+        s = trace.staleness_profile()
+        print(
+            f"  {policy:20s} realized_ratio={trace.realized_ratio():.3f}"
+            f"  effective_acc={trace.mean_effective_accuracy():.4f}"
+            f"  covered={s['covered_fraction']:.2f}"
+            f" (mean staleness {s['mean_staleness']:.1f} frames)"
+        )
+    print("  -> temporal_hysteresis covers more of the stream with fresh edge")
+    print("     results at a LOWER realized budget: the stale-result credit")
+    print("     spaces offloads, so the uplink queues stay short and results")
+    print("     arrive while still useful.  keyframe concentrates its budget")
+    print("     on scene changes but congests the links at this ratio — the")
+    print("     per-frame trace (r.source / r.staleness / r.effective_accuracy)")
+    print("     shows exactly where the accuracy went.")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,10 +68,12 @@ def register_policy(name: str):
 
 def _ensure_plugins() -> None:
     """Import policy plugins living outside repro.api (the netsim queue-aware
-    controllers) so registry lookups see them.  Lazy — called at lookup time,
-    when repro.api.policies is fully initialized — so there is no import
-    cycle and importing repro.api stays cheap."""
+    controllers, the video temporal policies) so registry lookups see them.
+    Lazy — called at lookup time, when repro.api.policies is fully
+    initialized — so there is no import cycle and importing repro.api stays
+    cheap."""
     import repro.netsim.policy  # noqa: F401  (registers on import)
+    import repro.video.policy  # noqa: F401
 
 
 def list_policies() -> List[str]:
@@ -106,6 +108,55 @@ def decide_sequential(policy: Policy, estimates: np.ndarray) -> np.ndarray:
     return np.fromiter(
         (policy.decide(float(e)) for e in flat), dtype=bool, count=flat.size
     )
+
+
+#: finite sentinels for the degenerate budgets (ratio 0 / 1), kept finite so
+#: downstream arithmetic (Bellman backups, penalty subtraction) stays nan-free
+NEVER_THRESHOLD = 1e9
+ALWAYS_THRESHOLD = -1e9
+
+
+def quantile_threshold(calibration_scores: np.ndarray, ratio: float) -> float:
+    """The (1 - ratio)-quantile of the calibration distribution — the
+    threshold every quantile-budget policy (api, netsim, video) derives its
+    decision rule from — with finite sentinels at the degenerate budgets."""
+    cal = np.asarray(calibration_scores, np.float64)
+    r = float(np.clip(ratio, 0.0, 1.0))
+    if cal.size == 0 or r >= 1.0:
+        return ALWAYS_THRESHOLD
+    if r <= 0.0:
+        return NEVER_THRESHOLD
+    return float(np.quantile(cal, 1.0 - r))
+
+
+class BudgetTracker:
+    """Integral controller on the realized offload ratio, shared by the
+    stateful stream policies (netsim ``queue_aware``, the video temporal
+    policies): with ``deficit`` the running shortfall in frames
+    (``ratio * decided - offloaded``), the effective budget is
+    ``ratio + gain * deficit`` clipped to [0, 1].  Because the deficit
+    accumulates, any persistent suppression — congestion, stale-result
+    credit — is eventually paid back and the realized ratio converges to
+    the target.  The target's own degenerate budgets stay hard caps: the
+    controller may not push a ratio-0 stream into offloading."""
+
+    def __init__(self, gain: float):
+        self.gain = float(gain)
+        self._decided = 0
+        self._offloaded = 0
+
+    def threshold(self, sorted_calibration: np.ndarray, ratio: float) -> float:
+        if ratio <= 0.0:
+            return NEVER_THRESHOLD
+        if ratio >= 1.0:
+            return ALWAYS_THRESHOLD
+        deficit = ratio * self._decided - self._offloaded
+        r_adj = float(np.clip(ratio + self.gain * deficit, 0.0, 1.0))
+        return quantile_threshold(sorted_calibration, r_adj)
+
+    def account(self, offload: bool) -> None:
+        self._decided += 1
+        self._offloaded += int(offload)
 
 
 @register_policy("threshold")

@@ -10,7 +10,7 @@ Ground truth boxes are exact.  The generator is deterministic in its seed
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -53,6 +53,34 @@ def _shape_mask(kind: int, h: int, w: int, rng: np.random.Generator) -> np.ndarr
     return (np.abs(xx - cx) <= tw / 2) | (np.abs(yy - cy) <= th / 2)
 
 
+def paint_object(
+    img: np.ndarray,
+    box: Sequence[float],
+    cls: int,
+    colour: np.ndarray,
+    rng: np.random.Generator,
+) -> None:
+    """Draw one shape (class ``cls = kind * 2 + warm``) into ``img`` in
+    place, clipped to the image bounds.  Shared by the static generator and
+    the video scene renderer (:mod:`repro.video.scene`)."""
+    size = img.shape[0]
+    x1, y1 = max(int(round(box[0])), 0), max(int(round(box[1])), 0)
+    x2, y2 = min(int(round(box[2])), size), min(int(round(box[3])), size)
+    w, h = x2 - x1, y2 - y1
+    if w <= 0 or h <= 0:
+        return
+    mask = _shape_mask(int(cls) // 2, h, w, rng)
+    patch = img[y1:y2, x1:x2]
+    patch[mask] = np.clip(colour, 0, 1)
+    img[y1:y2, x1:x2] = patch
+
+
+def class_colour(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """A jittered colour sample from the class's warm/cool palette."""
+    palette = _WARM if int(cls) % 2 == 0 else _COOL
+    return palette[rng.integers(0, len(palette))] + rng.normal(0, 0.05, 3)
+
+
 def render_image(
     rng: np.random.Generator, size: int = IMAGE_SIZE, max_objects: int = 6
 ) -> Tuple[np.ndarray, GroundTruth]:
@@ -69,12 +97,7 @@ def render_image(
         h = int(rng.integers(10, 31))
         x1 = int(rng.integers(0, size - w))
         y1 = int(rng.integers(0, size - h))
-        palette = _WARM if warm == 0 else _COOL
-        colour = palette[rng.integers(0, len(palette))] + rng.normal(0, 0.05, 3)
-        mask = _shape_mask(kind, h, w, rng)
-        patch = img[y1 : y1 + h, x1 : x1 + w]
-        patch[mask] = np.clip(colour, 0, 1)
-        img[y1 : y1 + h, x1 : x1 + w] = patch
+        paint_object(img, [x1, y1, x1 + w, y1 + h], cls, class_colour(cls, rng), rng)
         boxes.append([x1, y1, x1 + w, y1 + h])
         classes.append(cls)
     gt = GroundTruth(np.array(boxes, dtype=np.float64), np.array(classes))

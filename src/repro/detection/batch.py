@@ -75,7 +75,12 @@ class _BoxBatch:
     @staticmethod
     def _padded_fields(items, max_boxes: Optional[int]):
         """(resolved max_boxes, common field dict) for a ragged item list —
-        every item exposes ``boxes``/``classes`` and ``len``."""
+        every item exposes ``boxes``/``classes`` and ``len``.
+
+        ``items`` may be empty: the result is the explicit zero-length
+        batch (``B == 0`` with ``max_boxes`` at the padding floor), which
+        round-trips through ``to_list``/``match_batch``/``to_image_evals``
+        like any other batch."""
         ns = [len(it) for it in items]
         top = max(ns, default=0)
         if max_boxes is None:
@@ -119,6 +124,8 @@ class GroundTruthBatch(_BoxBatch):
     def from_list(
         cls, gts: Sequence[GroundTruth], max_boxes: Optional[int] = None
     ) -> "GroundTruthBatch":
+        """Pad a ragged annotation list; ``[]`` yields the explicit
+        zero-length batch."""
         _, fields = cls._padded_fields(gts, max_boxes)
         return cls(**fields)
 
@@ -142,6 +149,8 @@ class DetectionsBatch(_BoxBatch):
     def from_list(
         cls, dets: Sequence[Detections], max_boxes: Optional[int] = None
     ) -> "DetectionsBatch":
+        """Pad a ragged detection list; ``[]`` yields the explicit
+        zero-length batch."""
         max_boxes, fields = cls._padded_fields(dets, max_boxes)
         scores = _stack_padded(
             [d.scores for d in dets], max_boxes, (), np.float32, 0.0

@@ -30,24 +30,12 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.api.policies import decide_sequential, register_policy
-
-#: finite sentinels for the degenerate budgets (ratio 0 / 1); kept finite so
-#: the Bellman backup stays nan-free (mirrors TokenBucketPolicy.set_ratio)
-_NEVER = 1e9
-_ALWAYS = -1e9
-
-
-def quantile_threshold(calibration_scores: np.ndarray, ratio: float) -> float:
-    """The (1 - ratio)-quantile of the calibration distribution, with finite
-    sentinels at the degenerate budgets."""
-    cal = np.asarray(calibration_scores, np.float64)
-    r = float(np.clip(ratio, 0.0, 1.0))
-    if cal.size == 0 or r >= 1.0:
-        return _ALWAYS
-    if r <= 0.0:
-        return _NEVER
-    return float(np.quantile(cal, 1.0 - r))
+from repro.api.policies import (
+    BudgetTracker,
+    decide_sequential,
+    quantile_threshold,
+    register_policy,
+)
 
 
 # --------------------------------------------------------------- queue_aware
@@ -67,12 +55,10 @@ class QueueAwarePolicy:
     delay_scale : float
         Delay (in sim time units) at which half the max penalty applies.
     gain : float
-        Integral gain of the budget tracker: with ``deficit`` the running
-        shortfall in *frames* (``ratio * decided - offloaded``), the
-        effective budget is ``ratio + gain * deficit`` clipped to [0, 1].
-        Because the deficit accumulates, any persistent suppression —
-        however long the congestion lasts — is eventually paid back and the
-        realized ratio converges to the target exactly.
+        Integral gain of the shared realized-ratio controller
+        (:class:`repro.api.policies.BudgetTracker`): any persistent
+        suppression — however long the congestion lasts — is eventually
+        paid back and the realized ratio converges to the target exactly.
     congestion : callable or None
         Zero-arg probe returning the predicted uplink sojourn (queue wait +
         transmission) at the best edge, in sim time units.  Runtime wiring,
@@ -95,11 +81,13 @@ class QueueAwarePolicy:
         self._cal = np.sort(np.asarray(calibration_scores, np.float64))
         self.delay_weight = float(delay_weight)
         self.delay_scale = float(delay_scale)
-        self.gain = float(gain)
         self.congestion = congestion
-        self._decided = 0
-        self._offloaded = 0
+        self._budget = BudgetTracker(gain)
         self.set_ratio(ratio)
+
+    @property
+    def gain(self) -> float:
+        return self._budget.gain
 
     def set_ratio(self, ratio: float) -> None:
         self.ratio = float(np.clip(ratio, 0.0, 1.0))
@@ -108,21 +96,10 @@ class QueueAwarePolicy:
         d = max(float(self.congestion()), 0.0) if self.congestion is not None else 0.0
         return self.delay_weight * d / (d + self.delay_scale)
 
-    def _threshold(self) -> float:
-        deficit = self.ratio * self._decided - self._offloaded
-        r_adj = float(np.clip(self.ratio + self.gain * deficit, 0.0, 1.0))
-        # the target ratio's own degenerate budgets stay hard caps: the
-        # controller may not push a ratio-0 stream into offloading
-        if self.ratio <= 0.0:
-            return _NEVER
-        if self.ratio >= 1.0:
-            return _ALWAYS
-        return quantile_threshold(self._cal, r_adj)
-
     def decide(self, estimate: float) -> bool:
-        off = bool(float(estimate) - self._penalty() > self._threshold())
-        self._decided += 1
-        self._offloaded += int(off)
+        thr = self._budget.threshold(self._cal, self.ratio)
+        off = bool(float(estimate) - self._penalty() > thr)
+        self._budget.account(off)
         return off
 
     def decide_batch(self, estimates: np.ndarray) -> np.ndarray:

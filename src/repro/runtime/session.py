@@ -40,7 +40,13 @@ class StepDecision:
 
 @dataclass(frozen=True)
 class SessionTelemetry:
-    """Snapshot of a session's counters (cumulative + rolling window)."""
+    """Snapshot of a session's counters (cumulative + rolling window).
+
+    The video counters (``covered_frames``/``mean_staleness``/
+    ``effective_frames``/``mean_effective_accuracy``) stay zero unless the
+    stream records temporal state (see ``record_staleness`` /
+    ``record_effective_accuracy``); ``as_dict`` keeps them behind
+    ``include_video`` so existing consumers see a byte-stable payload."""
 
     processed: int
     offloaded: int
@@ -51,9 +57,13 @@ class SessionTelemetry:
     pending: int
     reward_sum: float
     rewards_recorded: int
+    covered_frames: int = 0
+    mean_staleness: float = 0.0
+    effective_frames: int = 0
+    mean_effective_accuracy: float = 0.0
 
-    def as_dict(self) -> Dict[str, Any]:
-        return {
+    def as_dict(self, include_video: bool = False) -> Dict[str, Any]:
+        out = {
             "processed": self.processed,
             "offloaded": self.offloaded,
             "realized_ratio": self.realized_ratio,
@@ -64,6 +74,16 @@ class SessionTelemetry:
             "reward_sum": self.reward_sum,
             "rewards_recorded": self.rewards_recorded,
         }
+        if include_video:
+            out.update(
+                {
+                    "covered_frames": self.covered_frames,
+                    "mean_staleness": self.mean_staleness,
+                    "effective_frames": self.effective_frames,
+                    "mean_effective_accuracy": self.mean_effective_accuracy,
+                }
+            )
+        return out
 
 
 class OffloadSession:
@@ -94,6 +114,20 @@ class OffloadSession:
     state_probe : callable or None
         Zero-arg probe of the observed ``(queue_depth, channel_state)``,
         forwarded to policies that declare it (``value_iteration``).
+    staleness : callable or None
+        Zero-arg probe of the stream's current edge-result staleness
+        (frames since the newest covering result was captured, ``inf`` when
+        none), forwarded to policies that declare it
+        (``temporal_hysteresis``); wired by the video runtime.
+    scene_change : callable or None
+        Zero-arg probe of the stream's scene-change score in [0, 1],
+        forwarded to policies that declare it (``keyframe``).
+    tracker : repro.video.track.VideoTracker or None
+        Optional temporal state carried with the stream — sessions opened
+        on video streams hold the tracker that ages/propagates stale edge
+        results (possibly shared between sessions when the tracker is
+        batched over streams).  The session itself never calls it; it rides
+        here so stream state travels as one object.
 
     Each injected callable reaches the policy constructor only when the
     policy's ``context_params`` declares it — runtime wiring, never part of
@@ -110,15 +144,25 @@ class OffloadSession:
         clock: Optional[Callable[[], float]] = None,
         congestion: Optional[Callable[[], float]] = None,
         state_probe: Optional[Callable[[], tuple]] = None,
+        staleness: Optional[Callable[[], float]] = None,
+        scene_change: Optional[Callable[[], float]] = None,
+        tracker: Optional[Any] = None,
     ):
         if engine.calibration_scores is None:
             raise RuntimeError("OffloadSession over an unfitted engine")
         self.engine = engine
+        self.tracker = tracker
         self.micro_batch = max(int(micro_batch), 1)
         self._ratio = float(engine.ratio if ratio is None else ratio)
         kwargs = dict(engine.policy_kwargs)
         accepted = set(policy_context_params(engine.policy_name))
-        context = {"clock": clock, "congestion": congestion, "state_probe": state_probe}
+        context = {
+            "clock": clock,
+            "congestion": congestion,
+            "state_probe": state_probe,
+            "staleness": staleness,
+            "scene_change": scene_change,
+        }
         kwargs.update(
             {k: v for k, v in context.items() if v is not None and k in accepted}
         )
@@ -134,6 +178,10 @@ class OffloadSession:
         self._estimate_sum = 0.0
         self._reward_sum = 0.0
         self._rewards_recorded = 0
+        self._staleness_sum = 0.0
+        self._covered_frames = 0
+        self._accuracy_sum = 0.0
+        self._effective_frames = 0
 
     # ------------------------------------------------------------- streaming
 
@@ -249,6 +297,18 @@ class OffloadSession:
         self._reward_sum += float(reward)
         self._rewards_recorded += 1
 
+    def record_staleness(self, staleness: float) -> None:
+        """Account one frame served from a propagated (stale) edge result;
+        ``staleness`` is the age of that result in frames."""
+        self._staleness_sum += float(staleness)
+        self._covered_frames += 1
+
+    def record_effective_accuracy(self, accuracy: float) -> None:
+        """Account one frame's effective accuracy — the AP of whatever was
+        actually served for it (weak output or propagated edge result)."""
+        self._accuracy_sum += float(accuracy)
+        self._effective_frames += 1
+
     # ------------------------------------------------------------- telemetry
 
     @property
@@ -265,4 +325,16 @@ class OffloadSession:
             pending=self._pending_rows,
             reward_sum=self._reward_sum,
             rewards_recorded=self._rewards_recorded,
+            covered_frames=self._covered_frames,
+            mean_staleness=(
+                self._staleness_sum / self._covered_frames
+                if self._covered_frames
+                else 0.0
+            ),
+            effective_frames=self._effective_frames,
+            mean_effective_accuracy=(
+                self._accuracy_sum / self._effective_frames
+                if self._effective_frames
+                else 0.0
+            ),
         )

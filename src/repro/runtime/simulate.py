@@ -40,7 +40,14 @@ class StepRecord:
     ``latency == queue_delay + transmit_delay + service_delay`` (the uplink
     queue wait, the transmission over the link, and the edge service time —
     the first two are 0 on link-free edges).  Non-offloaded frames carry
-    ``None`` for all three."""
+    ``None`` for all three.
+
+    Video streams (``repro.video``) additionally stamp temporal fields:
+    ``source`` is what was actually served for the frame (``"weak"`` or
+    ``"edge"`` for a propagated stale edge result), ``staleness`` the age of
+    that result in frames (None when served weak), ``effective_accuracy``
+    the frame's AP against ground truth.  Per-image simulations leave all
+    three None."""
 
     step: int
     t_arrival: float
@@ -53,6 +60,9 @@ class StepRecord:
     queue_delay: Optional[float] = None
     transmit_delay: Optional[float] = None
     service_delay: Optional[float] = None
+    source: Optional[str] = None
+    staleness: Optional[float] = None
+    effective_accuracy: Optional[float] = None
 
     def as_dict(self) -> Dict[str, Any]:
         return {
@@ -67,6 +77,9 @@ class StepRecord:
             "queue_delay": self.queue_delay,
             "transmit_delay": self.transmit_delay,
             "service_delay": self.service_delay,
+            "source": self.source,
+            "staleness": self.staleness,
+            "effective_accuracy": self.effective_accuracy,
         }
 
 
@@ -88,6 +101,26 @@ class StreamTrace:
         """Frames actually served by an edge, in arrival order (degraded and
         dropped frames are False — they never reached the strong model)."""
         return np.array([r.outcome == OUTCOME_OFFLOADED for r in self.records])
+
+    def effective_accuracy(self) -> Optional[float]:
+        """Mean per-frame effective accuracy over the records that carry it
+        (video streams; ``None`` for per-image simulations)."""
+        vals = [
+            r.effective_accuracy
+            for r in self.records
+            if r.effective_accuracy is not None
+        ]
+        return float(np.mean(vals)) if vals else None
+
+    def staleness_profile(self) -> Dict[str, float]:
+        """How the stream was actually served: fraction of frames answered
+        from a propagated edge result and their mean staleness."""
+        stale = [r.staleness for r in self.records if r.staleness is not None]
+        n = len(self.records)
+        return {
+            "covered_fraction": len(stale) / n if n else 0.0,
+            "mean_staleness": float(np.mean(stale)) if stale else 0.0,
+        }
 
     def latency_decomposition(self) -> Optional[Dict[str, float]]:
         """Mean queue/transmit/service components over the offloaded frames
@@ -111,6 +144,7 @@ class StreamTrace:
             "dispatcher": self.dispatcher,
             "mean_offload_latency": float(np.mean(lats)) if lats else None,
             "latency_decomposition": self.latency_decomposition(),
+            "effective_accuracy": self.effective_accuracy(),
         }
 
 
@@ -213,11 +247,16 @@ class OffloadRuntime:
         ratio: Optional[float] = None,
         micro_batch: int = 8,
         telemetry_window: int = 64,
+        staleness: Optional[Any] = None,
+        scene_change: Optional[Any] = None,
+        tracker: Optional[Any] = None,
     ) -> OffloadSession:
         """A new per-stream session sharing the frozen engine; time-based
-        policies see the runtime's manual clock, and queue-aware policies
+        policies see the runtime's manual clock, queue-aware policies
         (``queue_aware`` / ``value_iteration``) see live congestion probes
-        over the runtime's fleet."""
+        over the runtime's fleet, and video runtimes thread their temporal
+        probes (``staleness`` / ``scene_change``) and per-stream tracker
+        through unchanged."""
         return OffloadSession(
             self.engine,
             ratio=ratio,
@@ -226,6 +265,9 @@ class OffloadRuntime:
             clock=self.clock,
             congestion=self._congestion,
             state_probe=self._state_probe,
+            staleness=staleness,
+            scene_change=scene_change,
+            tracker=tracker,
         )
 
     # ------------------------------------------------------------- streaming

@@ -62,6 +62,29 @@ def test_batch_round_trip_with_empty_images():
     assert db.max_boxes >= 8  # padded to the bucket floor
 
 
+def test_from_list_empty_is_explicit_zero_length_batch():
+    """``from_list([])`` is a well-defined zero-length batch for BOTH
+    containers — not an incidental numpy stack error."""
+    db = DetectionsBatch.from_list([])
+    gb = GroundTruthBatch.from_list([])
+    for batch in (db, gb):
+        assert len(batch) == 0
+        assert batch.boxes.shape == (0, batch.max_boxes, 4)
+        assert batch.counts.shape == (0,)
+        assert batch.to_list() == []
+    assert db.scores.shape == (0, db.max_boxes)
+    # and the zero-length batch flows through the matcher + eval conversion
+    res = match_batch(db, gb, THRESHOLDS)
+    assert res.tp.shape == (0, len(THRESHOLDS), db.max_boxes)
+    assert to_image_evals(db, gb, res) == []
+
+
+def test_from_list_empty_respects_explicit_max_boxes():
+    db = DetectionsBatch.from_list([], max_boxes=32)
+    gb = GroundTruthBatch.from_list([], max_boxes=32)
+    assert db.max_boxes == 32 and gb.max_boxes == 32
+
+
 def test_from_list_overflow_raises():
     d = Detections(np.zeros((5, 4)), np.zeros(5), np.zeros(5, int))
     with pytest.raises(ValueError):

@@ -1,0 +1,34 @@
+"""The benchmark harness selection registry: every ``bench_*`` function in
+benchmarks/run.py must be registered (and hence runnable by ``--smoke`` or
+the full run) — the tier-1 twin of the ``run.py --check`` CI guard, so a
+new bench can't silently drop out of the allowlists."""
+import importlib.util
+import os
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def bench_run():
+    path = os.path.join(
+        os.path.dirname(__file__), os.pardir, "benchmarks", "run.py"
+    )
+    spec = importlib.util.spec_from_file_location("bench_run", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_every_bench_function_is_registered(bench_run):
+    assert bench_run.check_registry() == []
+
+
+def test_registry_names_are_unique_and_disjoint(bench_run):
+    full, smoke = bench_run.registered_benches()
+    names = [n for n, _ in full + smoke]
+    assert len(names) == len(set(names))
+
+
+def test_video_bench_in_smoke_allowlist(bench_run):
+    _, smoke = bench_run.registered_benches()
+    assert "video_pipeline" in {n for n, _ in smoke}

@@ -134,6 +134,49 @@ def test_session_requires_fitted_engine():
         OffloadSession(OffloadEngine())
 
 
+def test_session_telemetry_as_dict_byte_stable(threshold_engine):
+    """The default ``as_dict`` payload must stay byte-stable for existing
+    consumers: the video counters appear only behind ``include_video``."""
+    eng, x = threshold_engine
+    session = OffloadSession(eng, micro_batch=4)
+    session.submit_batch(features=x[:12])
+    legacy_keys = [
+        "processed", "offloaded", "realized_ratio", "rolling_ratio",
+        "mean_estimate", "target_ratio", "pending", "reward_sum",
+        "rewards_recorded",
+    ]
+    assert list(session.telemetry.as_dict().keys()) == legacy_keys
+    before = session.telemetry.as_dict()
+    # recording temporal state must not leak into the default payload
+    session.record_staleness(2.0)
+    session.record_staleness(4.0)
+    session.record_effective_accuracy(0.5)
+    assert session.telemetry.as_dict() == before
+    full = session.telemetry.as_dict(include_video=True)
+    assert list(full.keys()) == legacy_keys + [
+        "covered_frames", "mean_staleness", "effective_frames",
+        "mean_effective_accuracy",
+    ]
+    assert full["covered_frames"] == 2
+    assert full["mean_staleness"] == pytest.approx(3.0)
+    assert full["effective_frames"] == 1
+    assert full["mean_effective_accuracy"] == pytest.approx(0.5)
+
+
+def test_session_carries_tracker_and_temporal_probes(threshold_engine):
+    """``tracker=`` rides the session and temporal probes reach only the
+    policies that declare them (threshold accepts none — no crash)."""
+    eng, x = threshold_engine
+    marker = object()
+    session = OffloadSession(
+        eng, micro_batch=1, tracker=marker,
+        staleness=lambda: 1.0, scene_change=lambda: 0.0,
+    )
+    assert session.tracker is marker
+    out = session.submit(features=x[0])
+    assert len(out) == 1  # probes ignored by a contextless policy
+
+
 def test_engine_save_load_resume_session(threshold_engine, tmp_path):
     """save -> load -> a session over the loaded engine continues the stream
     with decisions identical to the original artifact's."""

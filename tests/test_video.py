@@ -1,0 +1,454 @@
+"""repro.video: seeded scene generation, the jitted tracker vs its Python
+reference associator, stale-result propagation, the temporal policies, and
+the 8-stream congested-fleet acceptance scenario."""
+import numpy as np
+import pytest
+
+from repro.api import OffloadEngine, list_policies, make_policy
+from repro.api.policies import policy_context_params
+from repro.detection.map_engine import Detections
+from repro.runtime import OffloadSession
+from repro.video import (
+    STRONG_PROFILE,
+    WEAK_PROFILE,
+    DetectionClip,
+    SceneConfig,
+    TrackerConfig,
+    VideoTracker,
+    default_video_scenario,
+    detection_overlap,
+    frame_accuracies,
+    generate_clip,
+    run_video_scenario,
+    synthesize_detections,
+    track_clip,
+    track_clip_ref,
+)
+from repro.video.runtime import fuse_detections
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - hypothesis is optional (see CI)
+    given = None
+
+
+EXACT_FIELDS = (
+    "ids", "active", "classes", "age", "det_track",
+    "n_active", "n_matched", "n_new", "n_dead",
+)
+CLOSE_FIELDS = ("boxes", "vel", "conf")
+
+
+def assert_tracks_equal(got, ref):
+    for f in EXACT_FIELDS:
+        assert np.array_equal(getattr(got, f), getattr(ref, f)), f
+    for f in CLOSE_FIELDS:
+        np.testing.assert_allclose(
+            getattr(got, f), getattr(ref, f), atol=1e-5, rtol=1e-5, err_msg=f
+        )
+
+
+# ------------------------------------------------------------------ scene
+
+
+def test_generate_clip_seeded_bit_identical():
+    a = generate_clip(3, 24, seed=7)
+    b = generate_clip(3, 24, seed=7)
+    for f in ("boxes", "classes", "ids", "mask", "cuts"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    c = generate_clip(3, 24, seed=8)
+    assert not np.array_equal(a.boxes, c.boxes)
+
+
+def test_clip_containers_round_trip():
+    clip = generate_clip(2, 10, seed=0)
+    assert clip.n_frames == 10 and clip.n_streams == 2
+    gb = clip.gt_frame(3)
+    assert len(gb) == 2
+    g = clip.gt(3, 1)
+    np.testing.assert_allclose(g.boxes, gb[1].boxes)
+    assert len(clip.gt_stream(0)) == 10
+    # object identities persist between consecutive frames (tracking exists)
+    common = set(clip.ids[4, 0][clip.mask[4, 0]]) & set(
+        clip.ids[5, 0][clip.mask[5, 0]]
+    )
+    assert common
+
+
+def test_detection_clip_layout_and_flatten():
+    clip = generate_clip(2, 8, seed=1)
+    weak = synthesize_detections(clip, WEAK_PROFILE, seed=2)
+    assert (weak.n_frames, weak.n_streams) == (8, 2)
+    fb = weak.frame(5)
+    np.testing.assert_array_equal(fb.boxes, weak.boxes[5])
+    d = weak.det(5, 1)
+    assert len(d) == int(weak.mask[5, 1].sum())
+    flat = weak.flatten()
+    assert len(flat) == 16
+    np.testing.assert_array_equal(flat.boxes[5 * 2 + 1], weak.boxes[5, 1])
+
+
+def test_synthesized_tiers_order_by_accuracy():
+    """The weak profile must actually be weaker: per-frame AP of strong
+    detections dominates weak on the same clip."""
+    clip = generate_clip(3, 16, seed=3)
+    gts = [clip.gt(t, b) for t in range(16) for b in range(3)]
+    weak = synthesize_detections(clip, WEAK_PROFILE, seed=4)
+    strong = synthesize_detections(clip, STRONG_PROFILE, seed=5)
+    accs_w = frame_accuracies(
+        [weak.det(t, b) for t in range(16) for b in range(3)], gts
+    )
+    accs_s = frame_accuracies(
+        [strong.det(t, b) for t in range(16) for b in range(3)], gts
+    )
+    assert accs_s.mean() > accs_w.mean() + 0.2
+
+
+# ---------------------------------------------------------------- tracker
+
+
+def test_track_clip_matches_reference_on_real_clip():
+    clip = generate_clip(3, 20, seed=11, config=SceneConfig(p_cut=0.1))
+    weak = synthesize_detections(clip, WEAK_PROFILE, seed=12)
+    cfg = TrackerConfig()
+    assert_tracks_equal(track_clip(weak, cfg), track_clip_ref(weak, cfg))
+
+
+def test_streaming_update_equals_scan():
+    clip = generate_clip(2, 12, seed=13)
+    weak = synthesize_detections(clip, WEAK_PROFILE, seed=14)
+    hist = track_clip(weak)
+    vt = VideoTracker(2)
+    for t in range(12):
+        tf = vt.update(weak.frame(t))
+    assert np.array_equal(tf.ids, hist.ids[-1])
+    assert np.array_equal(tf.active, hist.active[-1])
+    np.testing.assert_array_equal(tf.boxes, hist.boxes[-1])
+
+
+if given is not None:
+
+    _T, _B, _K = 4, 2, 4
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        present=st.lists(st.booleans(), min_size=_T * _B * _K, max_size=_T * _B * _K),
+        geom=st.lists(
+            st.tuples(
+                st.integers(0, 10),   # x1 / 4
+                st.integers(0, 10),   # y1 / 4
+                st.integers(2, 6),    # w / 4
+                st.integers(2, 6),    # h / 4
+            ),
+            min_size=_T * _B * _K,
+            max_size=_T * _B * _K,
+        ),
+        scores=st.lists(
+            st.sampled_from([0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]),
+            min_size=_T * _B * _K,
+            max_size=_T * _B * _K,
+        ),
+        classes=st.lists(
+            st.integers(0, 2), min_size=_T * _B * _K, max_size=_T * _B * _K
+        ),
+    )
+    def test_tracker_scan_matches_reference_property(present, geom, scores, classes):
+        """Hypothesis oracle: the jitted scan association over a clip is
+        identical to the per-frame Python reference — including empty
+        frames and arbitrary (non-prefix) padded rows.  Geometry lives on a
+        4-px grid so float32 IoU rounds identically on both paths."""
+        shape = (_T, _B, _K)
+        boxes = np.zeros(shape + (4,), np.float32)
+        g = np.asarray(geom, np.float32).reshape(shape + (4,))
+        boxes[..., 0] = g[..., 0] * 4
+        boxes[..., 1] = g[..., 1] * 4
+        boxes[..., 2] = (g[..., 0] + g[..., 2]) * 4
+        boxes[..., 3] = (g[..., 1] + g[..., 3]) * 4
+        mask = np.asarray(present, bool).reshape(shape)
+        dets = DetectionClip(
+            boxes=np.where(mask[..., None], boxes, 0.0),
+            scores=np.where(mask, np.asarray(scores, np.float32).reshape(shape), 0.0),
+            classes=np.where(mask, np.asarray(classes, np.int32).reshape(shape), -1),
+            mask=mask,
+        )
+        cfg = TrackerConfig(max_tracks=8, max_dets=_K)
+        assert_tracks_equal(track_clip(dets, cfg), track_clip_ref(dets, cfg))
+
+else:  # pragma: no cover - exercised only without hypothesis
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_tracker_scan_matches_reference_property():
+        pass
+
+
+def test_tracker_rejects_mismatched_stream_count():
+    clip = generate_clip(2, 4, seed=0)
+    weak = synthesize_detections(clip, seed=0)
+    vt = VideoTracker(3)
+    with pytest.raises(ValueError):
+        vt.update(weak.frame(0))
+
+
+def test_propagate_snaps_to_tracks_and_decays():
+    """A static object: the stale edge det must land exactly on the track's
+    current box (pure-IoU association, class kept from the edge result)."""
+    box = np.array([[8.0, 8.0, 24.0, 24.0]])
+    frames = [[Detections(box, [0.9], [2])] for _ in range(4)]
+    dets = DetectionClip.from_frames(frames)
+    vt = VideoTracker(1, TrackerConfig(stale_decay=0.5))
+    for t in range(4):
+        vt.update(dets.frame(t))
+    # the edge saw the object at t0=1 with a different (corrected) class
+    edge = Detections(box + 1.0, [0.8], [5])
+    out = vt.propagate(edge, 1, 3, stream=0)
+    np.testing.assert_allclose(out.boxes, box)           # snapped to the track
+    assert out.classes.tolist() == [5]                    # edge label kept
+    assert out.scores[0] == pytest.approx(0.8 * 0.5 ** 2)
+    with pytest.raises(ValueError):
+        vt.propagate(edge, 3, 1)
+
+
+def test_propagate_unmatched_keeps_stale_geometry():
+    vt = VideoTracker(1)
+    vt.update(
+        DetectionClip.from_frames(
+            [[Detections(np.array([[40.0, 40.0, 56.0, 56.0]]), [0.9], [1])]]
+        ).frame(0)
+    )
+    edge = Detections(np.array([[0.0, 0.0, 8.0, 8.0]]), [0.7], [1])
+    out = vt.propagate(edge, 0, 2, stream=0)
+    np.testing.assert_allclose(out.boxes, edge.boxes)  # nothing to snap to
+
+
+def test_tracker_max_dets_overflow_raises():
+    vt = VideoTracker(1, TrackerConfig(max_dets=4))
+    big = Detections(np.zeros((6, 4)), np.zeros(6), np.zeros(6, int))
+    frame = DetectionClip.from_frames([[big]]).frame(0)
+    with pytest.raises(ValueError):
+        vt.update(frame)
+
+
+# --------------------------------------------------------------- features
+
+
+def test_detection_overlap_bounds():
+    a = Detections(np.array([[0.0, 0, 10, 10]]), [0.9], [1])
+    b = Detections(np.array([[0.0, 0, 10, 10], [30.0, 30, 40, 40]]), [0.8, 0.7], [1, 2])
+    assert detection_overlap(a, a) == 1.0
+    assert detection_overlap(a, b) == 0.5  # second det unexplained
+    empty = Detections(np.zeros((0, 4)), np.zeros(0), np.zeros(0, int))
+    assert detection_overlap(a, empty) == 1.0
+    assert detection_overlap(empty, a) == 0.0
+
+
+def test_fuse_detections_fills_uncovered_regions():
+    edge = Detections(np.array([[0.0, 0, 10, 10]]), [0.9], [3])
+    weak = Detections(
+        np.array([[1.0, 1, 11, 11], [30.0, 30, 40, 40]]), [0.6, 0.5], [1, 2]
+    )
+    fused = fuse_detections(edge, weak)
+    assert len(fused) == 2  # overlapping weak det suppressed, far one kept
+    assert fused.classes.tolist() == [3, 2]
+    empty = Detections(np.zeros((0, 4)), np.zeros(0), np.zeros(0, int))
+    assert fuse_detections(empty, weak) is weak
+    assert fuse_detections(edge, empty) is edge
+
+
+# ---------------------------------------------------------------- policies
+
+
+def test_video_policies_registered():
+    names = list_policies()
+    assert "temporal_hysteresis" in names and "keyframe" in names
+    assert policy_context_params("temporal_hysteresis") == ("staleness",)
+    assert policy_context_params("keyframe") == ("scene_change",)
+
+
+def test_temporal_hysteresis_tracks_ratio_without_probe():
+    rng = np.random.default_rng(1)
+    cal = rng.uniform(0, 1, 500)
+    p = make_policy("temporal_hysteresis", cal, 0.3)
+    mask = p.decide_batch(rng.uniform(0, 1, 2000))
+    assert abs(mask.mean() - 0.3) < 0.05
+
+
+def test_temporal_hysteresis_credit_defers_covered_frames():
+    """While a fresh edge result covers the stream the policy suppresses
+    offloads; the integral controller pays the budget back elsewhere."""
+    rng = np.random.default_rng(2)
+    cal = rng.uniform(0, 1, 500)
+    t = {"i": 0}
+
+    def staleness():
+        return 0.0 if 400 <= t["i"] < 600 else float("inf")
+
+    p = make_policy("temporal_hysteresis", cal, 0.4, staleness=staleness)
+    decisions = []
+    for e in rng.uniform(0, 1, 1000):
+        decisions.append(p.decide(float(e)))
+        t["i"] += 1
+    d = np.array(decisions)
+    covered, calm = d[400:600].mean(), np.concatenate([d[:400], d[600:]]).mean()
+    assert covered < calm
+    assert abs(d.mean() - 0.4) < 0.06
+
+
+def test_temporal_hysteresis_degenerate_budgets_stay_hard():
+    cal = np.random.default_rng(3).uniform(0, 1, 200)
+    xs = np.linspace(0, 1, 64)
+    assert not make_policy("temporal_hysteresis", cal, 0.0).decide_batch(xs).any()
+    assert make_policy("temporal_hysteresis", cal, 1.0).decide_batch(xs).all()
+    assert not make_policy("keyframe", cal, 0.0).decide_batch(xs).any()
+    assert make_policy("keyframe", cal, 1.0).decide_batch(xs).all()
+
+
+def test_temporal_hysteresis_validates_params():
+    cal = np.zeros(8)
+    with pytest.raises(ValueError):
+        make_policy("temporal_hysteresis", cal, 0.3, stale_horizon=0.0)
+    with pytest.raises(ValueError):
+        make_policy("temporal_hysteresis", cal, 0.3, ewma=0.0)
+    with pytest.raises(ValueError):
+        make_policy("keyframe", cal, 0.3, refractory=0)
+
+
+def test_keyframe_refractory_spaces_offloads():
+    rng = np.random.default_rng(4)
+    cal = rng.uniform(0, 1, 500)
+    p = make_policy("keyframe", cal, 0.3, refractory=3)
+    d = np.array([p.decide(float(e)) for e in rng.uniform(0, 1, 600)])
+    gaps = np.diff(np.flatnonzero(d))
+    assert gaps.size and gaps.min() >= 3
+    assert abs(d.mean() - 0.3) < 0.06
+
+
+def test_keyframe_refractory_is_a_hard_cap():
+    """A target above the refractory ceiling must clamp at 1/refractory —
+    a saturated deficit controller may NOT break the spacing (only the
+    degenerate ratio-1.0 target is absolute)."""
+    rng = np.random.default_rng(7)
+    cal = rng.uniform(0, 1, 500)
+    p = make_policy("keyframe", cal, 0.6, refractory=3)
+    d = np.array([p.decide(float(e)) for e in rng.uniform(0, 1, 2000)])
+    gaps = np.diff(np.flatnonzero(d))
+    assert gaps.min() >= 3
+    assert d.mean() <= 1.0 / 3.0 + 1e-9
+
+
+def test_keyframe_boosts_scene_changes():
+    rng = np.random.default_rng(5)
+    cal = rng.uniform(0, 1, 500)
+    cuts = set(range(50, 1000, 100))
+    t = {"i": 0}
+    # refractory=1 leaves every frame eligible, isolating the boost:
+    # with the hard cap active a cut right after an offload is (by
+    # design) not offloadable, which is not what this test measures
+    p = make_policy(
+        "keyframe", cal, 0.2, refractory=1,
+        scene_change=lambda: 1.0 if t["i"] in cuts else 0.0,
+    )
+    hits = 0
+    estimates = rng.uniform(0, 0.6, 1000)  # below-threshold stream
+    for e in estimates:
+        if p.decide(float(e)) and t["i"] in cuts:
+            hits += 1
+        t["i"] += 1
+    assert hits >= len([c for c in cuts if c < 1000]) * 0.8  # cuts get offloaded
+
+
+def test_video_policy_save_strips_probes(tmp_path):
+    rng = np.random.default_rng(6)
+    x = rng.normal(0, 1, (128, 8)).astype(np.float32)
+    from repro.api import MLPRewardModel
+    from repro.core import EstimatorConfig
+
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(config=EstimatorConfig(hidden=(8,), epochs=2)),
+        policy="temporal_hysteresis",
+        policy_kwargs=dict(staleness=lambda: 1.0, stale_credit=0.7),
+        ratio=0.3,
+    )
+    eng.fit(features=x, rewards=rng.normal(0, 1, 128))
+    path = str(tmp_path / "video_engine")
+    eng.save(path)
+    loaded = OffloadEngine.load(path)
+    assert loaded.policy_name == "temporal_hysteresis"
+    assert "staleness" not in loaded.policy_kwargs
+    assert loaded.policy_kwargs["stale_credit"] == 0.7
+    assert loaded.policy.staleness is None
+
+
+# ------------------------------------------------------------- end to end
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return default_video_scenario(8, 96, seed=0)
+
+
+def test_serve_clip_staleness_and_accuracy_semantics(scenario):
+    trace = run_video_scenario(scenario, "temporal_hysteresis", ratio=0.3)
+    assert trace.n_streams == 8 and trace.n_frames == 96
+    covered = 0
+    for s in trace.streams:
+        for r in s.records:
+            assert r.effective_accuracy is not None and 0.0 <= r.effective_accuracy <= 1.0
+            assert (r.staleness is not None) == (r.source == "edge")
+            if r.source == "edge":
+                covered += 1
+                assert 0.0 <= r.staleness <= scenario.max_stale
+            else:
+                assert r.source == "weak"
+        tel = s.telemetry
+        assert tel.effective_frames == len(s.records)
+        assert tel.covered_frames == sum(r.source == "edge" for r in s.records)
+        d = tel.as_dict(include_video=True)
+        assert d["mean_effective_accuracy"] == pytest.approx(s.effective_accuracy())
+    assert covered  # stale results actually got reused
+    # a frame can only be covered after some offload completed its round trip
+    first_edge = min(
+        r.step for s in trace.streams for r in s.records if r.source == "edge"
+    )
+    assert first_edge > 0
+    summary = trace.summary()
+    assert summary["staleness"]["covered_fraction"] > 0.2
+
+
+def test_video_trace_bit_identical_across_runs(scenario):
+    t1 = run_video_scenario(scenario, "keyframe", ratio=0.3)
+    t2 = run_video_scenario(scenario, "keyframe", ratio=0.3)
+    for s1, s2 in zip(t1.streams, t2.streams):
+        assert s1.records == s2.records
+    assert t1.summary() == t2.summary()
+
+
+def test_temporal_hysteresis_beats_threshold_at_equal_ratio(scenario):
+    """The headline acceptance criterion: on the seeded 8-stream congested
+    video scenario, ``temporal_hysteresis`` achieves strictly higher mean
+    effective accuracy than the per-image ``threshold`` policy at equal
+    realized offload ratio."""
+    qa = run_video_scenario(scenario, "temporal_hysteresis", ratio=0.3)
+    r_qa = qa.realized_ratio()
+    acc_qa = qa.mean_effective_accuracy()
+
+    # match the threshold policy's realized ratio empirically over a target
+    # grid (estimate-distribution shift moves realized off target)
+    runs = [
+        run_video_scenario(scenario, "threshold", ratio=t)
+        for t in (0.21, 0.24, 0.27, 0.30, 0.33)
+    ]
+    th = min(runs, key=lambda tr: abs(tr.realized_ratio() - r_qa))
+    assert abs(th.realized_ratio() - r_qa) < 0.03, (th.realized_ratio(), r_qa)
+    assert acc_qa > th.mean_effective_accuracy(), (
+        acc_qa, th.mean_effective_accuracy(),
+    )
+    # and the win is not bought with extra budget: every threshold run at
+    # the same-or-lower realized ratio also scores lower
+    for tr in runs:
+        if tr.realized_ratio() <= r_qa + 0.02:
+            assert acc_qa > tr.mean_effective_accuracy()
+    # more of the stream is served by (fresh enough) edge results
+    assert (
+        qa.staleness_profile()["covered_fraction"]
+        >= th.staleness_profile()["covered_fraction"]
+    )
