@@ -7,10 +7,13 @@
 #                     (CI; writes bench_results_smoke.csv); fails first if a
 #                     bench_* function is missing from the selection registry
 #   make bench-check  just the registry completeness guard
+#   make bench-compare  perf gate: diff the two most recent
+#                     artifacts/BENCH_<rev>.json, fail on >15% median
+#                     regressions (exit 0 when fewer than two artifacts)
 
 PY ?= python
 
-.PHONY: install test bench bench-smoke bench-check
+.PHONY: install test bench bench-smoke bench-check bench-compare
 
 install:
 	$(PY) -m pip install -e .
@@ -26,3 +29,6 @@ bench-check:
 
 bench-smoke: bench-check
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py --smoke
+
+bench-compare:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/compare.py

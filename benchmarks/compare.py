@@ -1,0 +1,115 @@
+"""Perf-regression gate over the benchmark artifact trail.
+
+``benchmarks/run.py`` writes ``artifacts/BENCH_<rev>.json`` on every full
+(or ``--smoke``) run.  This script diffs the two most recent artifacts (by
+mtime) bench-by-bench and exits nonzero when any shared bench's median
+regressed by more than the threshold (default 15%) — the CI perf gate.
+
+Rules of the comparison:
+
+- only benches present in BOTH artifacts are compared (smoke vs full runs
+  intersect cleanly; renamed/new/retired benches never trip the gate);
+- benches whose median is below ``--min-ms`` in either run are skipped —
+  sub-noise timings (and the derived-only rows that report ``0.0``)
+  whipsaw on shared CI hosts and would make the gate cry wolf;
+- fewer than two artifacts is a clean exit 0: the first run of a fresh
+  checkout (or a wiped artifacts dir) has nothing to compare against.
+
+Usage::
+
+    python benchmarks/compare.py [--threshold 0.15] [--min-ms 0.05]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+ART = os.path.join(os.path.dirname(__file__), "../artifacts")
+
+
+def latest_artifacts(art_dir: str, n: int = 2) -> List[str]:
+    """The ``n`` most recent BENCH_*.json paths, oldest first."""
+    paths = glob.glob(os.path.join(art_dir, "BENCH_*.json"))
+    paths.sort(key=os.path.getmtime)
+    return paths[-n:]
+
+
+def load_medians(path: str) -> Tuple[str, Dict[str, float]]:
+    with open(path) as f:
+        payload = json.load(f)
+    medians = {
+        b["name"]: float(b["median_ms"])
+        for b in payload.get("benches", [])
+    }
+    return payload.get("rev", os.path.basename(path)), medians
+
+
+def compare(
+    prev: Dict[str, float],
+    cur: Dict[str, float],
+    threshold: float,
+    min_ms: float,
+) -> Tuple[List[str], List[str], int]:
+    """(regressions, improvements, n_compared) between two median maps."""
+    regressions: List[str] = []
+    improvements: List[str] = []
+    compared = 0
+    for name in sorted(set(prev) & set(cur)):
+        p, c = prev[name], cur[name]
+        if p < min_ms or c < min_ms:
+            continue
+        compared += 1
+        delta = (c - p) / p
+        line = f"{name}: {p:.3f}ms -> {c:.3f}ms ({delta:+.1%})"
+        if delta > threshold:
+            regressions.append(line)
+        elif delta < -threshold:
+            improvements.append(line)
+    return regressions, improvements, compared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--threshold", type=float, default=0.15,
+        help="relative median slowdown that counts as a regression",
+    )
+    ap.add_argument(
+        "--min-ms", type=float, default=0.05,
+        help="skip benches with medians below this in either run",
+    )
+    ap.add_argument("--art-dir", default=ART)
+    args = ap.parse_args(argv)
+
+    paths = latest_artifacts(args.art_dir)
+    if len(paths) < 2:
+        print(
+            f"# {len(paths)} benchmark artifact(s) in {args.art_dir!r} — "
+            "need two to compare, nothing to gate"
+        )
+        return 0
+    (prev_rev, prev), (cur_rev, cur) = (load_medians(p) for p in paths)
+    regressions, improvements, compared = compare(
+        prev, cur, args.threshold, args.min_ms
+    )
+    print(
+        f"# comparing {prev_rev} -> {cur_rev}: {compared} benches above "
+        f"{args.min_ms}ms floor, threshold {args.threshold:.0%}"
+    )
+    for line in improvements:
+        print(f"improved  {line}")
+    for line in regressions:
+        print(f"REGRESSED {line}")
+    if regressions:
+        print(f"# {len(regressions)} regression(s) beyond {args.threshold:.0%}")
+        return 1
+    print("# no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

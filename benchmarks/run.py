@@ -22,6 +22,9 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
                              value-iteration ref loop vs jitted scan sweep
   bench_video_pipeline       video tracker-scan fps + stale-result propagate
                              vs per-frame rematch
+  bench_online_update        closed-loop updates/s (incremental last-layer
+                             solve vs jitted mini-refit) + NetworkEstimator
+                             per-offload overhead
   bench_iou                  iou_matrix ref vs Pallas side by side (+ratio)
   bench_kernels              Pallas oracles (jnp path) per-call time
 
@@ -499,6 +502,64 @@ def bench_video_pipeline(n_streams: int = 8, n_frames: int = 64) -> None:
     )
 
 
+def bench_online_update(n: int = 512, block: int = 8) -> None:
+    """The closed-loop update path: incremental last-layer solve vs the
+    jitted mini-refit (full updates/s, recalibration included), plus the
+    NetworkEstimator record+poll per-offload overhead."""
+    from repro.online import AdaptiveEngine, NetworkEstimator, OnlineConfig
+
+    rng = np.random.default_rng(0)
+    rewards = rng.uniform(0, 1, n)
+
+    def make(update_every: int, refit_every: int):
+        eng, x = _smoke_engine(n=n)
+        cfg = OnlineConfig(
+            min_observations=1, update_every=update_every,
+            refit_every=refit_every, refit_epochs=2,
+        )
+        ada = AdaptiveEngine(eng, cfg)
+        est = np.asarray(eng.score(features=x))
+        state = {"i": 0}
+
+        def step():
+            i = state["i"] % (n // block)
+            sl = slice(i * block, (i + 1) * block)
+            ada.observe(x[sl], est[sl], rewards[sl])
+            ada.maybe_update()
+            state["i"] += 1
+
+        return step
+
+    us_incr = _timeit(make(1, 10**9), n=20, warmup=4)
+    emit(
+        f"online_incremental_update_b{block}", us_incr,
+        f"updates_per_s={1e6 / us_incr:.0f};last_layer_solve",
+        shape={"block": block, "features": 387},
+    )
+    us_refit = _timeit(make(10**9, 1), n=3, warmup=2)
+    emit(
+        f"online_mini_refit_b{block}", us_refit,
+        f"updates_per_s={1e6 / us_refit:.0f}"
+        f";incremental_speedup={us_refit / max(us_incr, 1e-9):.1f}x",
+        shape={"block": block, "buffer": n},
+    )
+
+    net = NetworkEstimator()
+    tick = {"t": 0.0}
+
+    def net_step():
+        t = tick["t"]
+        net.record(t, 2.5, bits=8.0)
+        net.poll(t + 5.0)
+        tick["t"] = t + 1.0
+
+    us_net = _timeit(net_step, n=200, warmup=10)
+    emit(
+        "online_netstate_step", us_net,
+        f"rtt={net.rtt():.2f};per_offload_overhead",
+    )
+
+
 def bench_kernels() -> None:
     import jax.numpy as jnp
 
@@ -566,6 +627,7 @@ def registered_benches(interpret=None):
         ("dispatcher_throughput", bench_dispatcher_throughput),
         ("netsim_throughput", bench_netsim_throughput),
         ("video_pipeline", bench_video_pipeline),
+        ("online_update", bench_online_update),
         ("iou", lambda: bench_iou(interpret=interpret)),
         ("kernels", bench_kernels),
     ]

@@ -1,0 +1,119 @@
+"""Online adaptation walkthrough: closing the loop on the frozen engine.
+
+The paper fits its reward estimator once.  But every offloaded frame
+returns the strong detection — free supervision for exactly the quantity
+the estimator predicts.  ``repro.online`` feeds it back:
+
+1. the drift detector in isolation — why steady selection bias must NOT
+   fire, and why a genuine level shift must;
+2. the measured network estimator vs the oracle probes on the congested
+   fleet (same ``queue_aware`` policy, no simulator internals consulted);
+3. the headline: a mid-stream distribution shift served by a frozen vs an
+   adaptive engine at the same offload budget.
+
+Run:  python examples/online_adaptation.py
+      (after `pip install -e .`, or prefix with PYTHONPATH=src)
+"""
+import numpy as np
+
+from repro.api import MLPRewardModel, OffloadEngine
+from repro.core import EstimatorConfig
+from repro.online import (
+    DriftConfig,
+    DriftDetector,
+    NetworkEstimator,
+    default_shift_scenario,
+    run_shift_scenario,
+)
+from repro.runtime import default_congested_fleet, simulate
+
+
+def drift_demo() -> None:
+    print("== drift detection on realized-vs-predicted residuals ==")
+    det = DriftDetector(DriftConfig())
+    rng = np.random.default_rng(0)
+    # offloaded-subset residuals: constant negative offset (selection bias)
+    for r in -0.12 + 0.05 * rng.normal(size=300):
+        det.update(predicted=0.0, realized=r)
+    print(
+        f"  300 obs of steady bias:  statistic {det.statistic:5.2f}"
+        f"  (threshold {det.config.h})  drifted={det.drifted}"
+    )
+    fired_at = None
+    for i, r in enumerate(0.30 + 0.05 * rng.normal(size=50)):
+        det.update(predicted=0.0, realized=r)
+        if det.drifted and fired_at is None:
+            fired_at = i + 1
+    print(
+        f"  level shift of ~8 sigma:  fired after {fired_at} obs,"
+        f"  ratio widened x{det.ratio_multiplier():.2f}"
+    )
+    det.reset()  # the forced refit handles it; baseline re-settles
+    print(f"  after reset: statistic {det.statistic:.2f}, events {det.events}")
+
+
+def netstate_demo() -> None:
+    print("\n== measured probes vs the oracle (congested fleet) ==")
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (512, 32)).astype(np.float32)
+    rewards = 2.0 * x[:, 0] + 0.3 * rng.normal(size=512)
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(16,), epochs=10, batch_size=64)
+        ),
+        ratio=0.3,
+    )
+    eng.fit(features=x, rewards=rewards)
+    qa = eng.with_policy("queue_aware")
+    for label, net in (("oracle probes", None), ("measured RTT", NetworkEstimator())):
+        trace = simulate(
+            qa, features=x, edges=default_congested_fleet(3, seed=0),
+            ratio=0.3, micro_batch=1, seed=0, net_state=net,
+        )
+        off = [rec.latency for rec in trace.records if rec.outcome == "offloaded"]
+        print(
+            f"  {label:14s} offloads={len(off):3d}"
+            f"  mean_offload_latency={np.mean(off):5.2f}"
+        )
+        if net is not None:
+            t = net.telemetry()
+            print(
+                f"                 estimator view: srtt={t['rtt']:.2f}"
+                f"  bandwidth={t['bandwidth']:.3f}  delivered={t['delivered']:.0f}"
+            )
+    print("  -> the in-flight census (known at send time) matches the oracle's")
+    print("     sharp congestion signal; no simulator internals were read.")
+
+
+def headline_demo() -> None:
+    print("\n== the headline: mid-stream shift, frozen vs adaptive ==")
+    scenario = default_shift_scenario()
+    frozen = run_shift_scenario(scenario)
+    adaptive = run_shift_scenario(scenario, adaptive=True)
+    for label, run in (("frozen", frozen), ("adaptive", adaptive)):
+        s = run.summary()
+        print(
+            f"  {label:9s} realized_ratio={s['realized_ratio']:.3f}"
+            f"  pre_shift={s['pre_shift_effective']:.3f}"
+            f"  post_shift={s['post_shift_effective']:.3f}"
+        )
+    up = adaptive.updates
+    print(
+        f"  adaptive arm: {up['observations']} observations ->"
+        f" {up['incremental_updates']} incremental updates,"
+        f" {up['refits']} refits, {up['drift_events']} drift event(s)"
+    )
+    gain = adaptive.mean_effective(post_shift=True) - frozen.mean_effective(
+        post_shift=True
+    )
+    print(f"  -> post-shift effective accuracy recovered: +{gain:.3f} AP")
+
+
+def main() -> None:
+    drift_demo()
+    netstate_demo()
+    headline_demo()
+
+
+if __name__ == "__main__":
+    main()

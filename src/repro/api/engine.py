@@ -194,8 +194,12 @@ class OffloadEngine:
 
     # ------------------------------------------------------------ save/load
 
-    def save(self, path: str, extra_meta: Optional[Dict[str, Any]] = None) -> None:
-        """Persist the calibrated stack as one ``.npz`` artifact."""
+    def artifact_state(
+        self, extra_meta: Optional[Dict[str, Any]] = None
+    ) -> "tuple[Dict[str, Any], Dict[str, Any]]":
+        """The calibrated stack as checkpoint ``(arrays, meta)`` — what
+        ``save`` writes.  Wrappers (``repro.online.AdaptiveEngine``) extend
+        these with their own state before writing one combined artifact."""
         if self.calibration_scores is None:
             raise RuntimeError("save() before fit()")
         model_arrays, model_meta = self.reward_model.state()
@@ -227,13 +231,20 @@ class OffloadEngine:
             "reward_model": model_meta,
             "extra": extra_meta if extra_meta is not None else self.extra_meta,
         }
+        return arrays, meta
+
+    def save(self, path: str, extra_meta: Optional[Dict[str, Any]] = None) -> None:
+        """Persist the calibrated stack as one ``.npz`` artifact."""
+        arrays, meta = self.artifact_state(extra_meta)
         save_flat(path, arrays, meta)
 
     @classmethod
-    def load(cls, path: str) -> "OffloadEngine":
-        arrays, meta = load_flat(path)
-        if meta is None or meta.get("kind") != "offload_engine":
-            raise ValueError(f"{path} is not an OffloadEngine checkpoint")
+    def from_artifact_state(
+        cls, arrays: Dict[str, Any], meta: Dict[str, Any]
+    ) -> "OffloadEngine":
+        """Rebuild a fitted engine from checkpoint ``(arrays, meta)`` (the
+        inverse of ``artifact_state``; also used in-memory to clone engines
+        without touching disk)."""
         fx_meta = meta.get("feature_extractor")
         fx = (
             make_feature_extractor(fx_meta["name"], **fx_meta["spec"])
@@ -261,3 +272,10 @@ class OffloadEngine:
             **engine.policy_kwargs,
         )
         return engine
+
+    @classmethod
+    def load(cls, path: str) -> "OffloadEngine":
+        arrays, meta = load_flat(path)
+        if meta is None or meta.get("kind") != "offload_engine":
+            raise ValueError(f"{path} is not an OffloadEngine checkpoint")
+        return cls.from_artifact_state(arrays, meta)

@@ -46,7 +46,12 @@ class SessionTelemetry:
     ``effective_frames``/``mean_effective_accuracy``) stay zero unless the
     stream records temporal state (see ``record_staleness`` /
     ``record_effective_accuracy``); ``as_dict`` keeps them behind
-    ``include_video`` so existing consumers see a byte-stable payload."""
+    ``include_video`` so existing consumers see a byte-stable payload.
+    The online counters (``mean_rtt``/``mean_bandwidth``/
+    ``online_updates``) follow the same pattern behind ``include_online``:
+    they stay zero unless the runtime records measured round trips
+    (``record_rtt``/``record_bandwidth``) or closed-loop model updates
+    (``record_update``)."""
 
     processed: int
     offloaded: int
@@ -61,8 +66,15 @@ class SessionTelemetry:
     mean_staleness: float = 0.0
     effective_frames: int = 0
     mean_effective_accuracy: float = 0.0
+    rtt_samples: int = 0
+    mean_rtt: float = 0.0
+    bandwidth_samples: int = 0
+    mean_bandwidth: float = 0.0
+    online_updates: int = 0
 
-    def as_dict(self, include_video: bool = False) -> Dict[str, Any]:
+    def as_dict(
+        self, include_video: bool = False, include_online: bool = False
+    ) -> Dict[str, Any]:
         out = {
             "processed": self.processed,
             "offloaded": self.offloaded,
@@ -81,6 +93,16 @@ class SessionTelemetry:
                     "mean_staleness": self.mean_staleness,
                     "effective_frames": self.effective_frames,
                     "mean_effective_accuracy": self.mean_effective_accuracy,
+                }
+            )
+        if include_online:
+            out.update(
+                {
+                    "rtt_samples": self.rtt_samples,
+                    "mean_rtt": self.mean_rtt,
+                    "bandwidth_samples": self.bandwidth_samples,
+                    "mean_bandwidth": self.mean_bandwidth,
+                    "online_updates": self.online_updates,
                 }
             )
         return out
@@ -166,6 +188,9 @@ class OffloadSession:
         kwargs.update(
             {k: v for k, v in context.items() if v is not None and k in accepted}
         )
+        # kept so `recalibrate()` can rebuild the policy (same runtime
+        # wiring) against refreshed engine calibration scores
+        self._policy_build_kwargs = dict(kwargs)
         self.policy = make_policy(
             engine.policy_name, engine.calibration_scores, self._ratio, **kwargs
         )
@@ -182,6 +207,11 @@ class OffloadSession:
         self._covered_frames = 0
         self._accuracy_sum = 0.0
         self._effective_frames = 0
+        self._rtt_sum = 0.0
+        self._rtt_samples = 0
+        self._bandwidth_sum = 0.0
+        self._bandwidth_samples = 0
+        self._online_updates = 0
 
     # ------------------------------------------------------------- streaming
 
@@ -287,6 +317,30 @@ class OffloadSession:
         self._ratio = float(ratio)
         self.policy.set_ratio(self._ratio)
 
+    def recalibrate(self, calibration_scores: Optional[np.ndarray] = None) -> None:
+        """Refresh the session policy's calibration distribution mid-stream
+        (closed-loop adaptation: the engine's scores just moved).  Stateful
+        policies with a sorted ``_cal`` array (the netsim/video/online
+        controllers) are patched in place so integral budget state survives;
+        anything else is rebuilt with the same runtime wiring."""
+        cal = (
+            self.engine.calibration_scores
+            if calibration_scores is None
+            else calibration_scores
+        )
+        if cal is None:
+            raise RuntimeError("recalibrate() with no calibration scores")
+        sorted_cal = np.sort(np.asarray(cal, np.float64))
+        if hasattr(self.policy, "_cal"):
+            self.policy._cal = sorted_cal
+        else:
+            self.policy = make_policy(
+                self.engine.policy_name,
+                sorted_cal,
+                self._ratio,
+                **self._policy_build_kwargs,
+            )
+
     @property
     def ratio(self) -> float:
         return self._ratio
@@ -308,6 +362,20 @@ class OffloadSession:
         actually served for it (weak output or propagated edge result)."""
         self._accuracy_sum += float(accuracy)
         self._effective_frames += 1
+
+    def record_rtt(self, rtt: float) -> None:
+        """Account one completed offload's measured round trip."""
+        self._rtt_sum += float(rtt)
+        self._rtt_samples += 1
+
+    def record_bandwidth(self, bandwidth: float) -> None:
+        """Account one measured uplink goodput sample (bits per time unit)."""
+        self._bandwidth_sum += float(bandwidth)
+        self._bandwidth_samples += 1
+
+    def record_update(self) -> None:
+        """Account one closed-loop model update visible to this stream."""
+        self._online_updates += 1
 
     # ------------------------------------------------------------- telemetry
 
@@ -337,4 +405,15 @@ class OffloadSession:
                 if self._effective_frames
                 else 0.0
             ),
+            rtt_samples=self._rtt_samples,
+            mean_rtt=(
+                self._rtt_sum / self._rtt_samples if self._rtt_samples else 0.0
+            ),
+            bandwidth_samples=self._bandwidth_samples,
+            mean_bandwidth=(
+                self._bandwidth_sum / self._bandwidth_samples
+                if self._bandwidth_samples
+                else 0.0
+            ),
+            online_updates=self._online_updates,
         )

@@ -206,7 +206,14 @@ def default_congested_fleet(
 
 
 class OffloadRuntime:
-    """The served system: engine artifact + edge fleet + dispatch strategy."""
+    """The served system: engine artifact + edge fleet + dispatch strategy.
+
+    ``net_state`` (a :class:`repro.online.netstate.NetworkEstimator`)
+    switches the congestion / state probes handed to queue-aware policies
+    from the simulator's oracle signals to *measured* estimates fed purely
+    by completed round trips — what a real device can actually observe.
+    The runtime binds it to its manual clock and fleet size and records
+    every admitted offload into it."""
 
     def __init__(
         self,
@@ -216,12 +223,17 @@ class OffloadRuntime:
         strategy: str = "least_loaded",
         on_saturation: str = "degrade",
         seed: int = 0,
+        net_state: Optional[Any] = None,
     ):
         self.engine = engine
         self.dispatcher = MultiEdgeDispatcher(
             edges, strategy, on_saturation=on_saturation, seed=seed
         )
         self.clock = ManualClock()
+        self.net_state = net_state
+        if net_state is not None:
+            net_state.bind_clock(self.clock)
+            net_state.bind_fleet(len(self.dispatcher.edges))
 
     def _best_edge(self) -> EdgeWorker:
         """The edge a new offload would most plausibly land on: the one
@@ -231,15 +243,28 @@ class OffloadRuntime:
         return min(edges, key=lambda e: e.predicted_uplink_delay(now))
 
     def _congestion(self) -> float:
-        """Predicted uplink queueing wait at the best edge right now — how
+        """Congestion signal for queue-aware policies: the *measured*
+        estimate when a ``net_state`` tracker is wired, else the oracle —
+        the predicted uplink queueing wait at the best edge right now (how
         long a frame offloaded at this instant would sit behind others
-        before its own transmission starts.  0 for link-free fleets."""
+        before its own transmission starts; 0 for link-free fleets)."""
+        if self.net_state is not None:
+            return float(self.net_state.congestion())
         return self._best_edge().predicted_uplink_delay(self.clock())
 
     def _state_probe(self):
-        """Observed (queue depth, channel state) at the best edge — the MDP
-        state ``value_iteration`` policies condition on."""
+        """(queue depth, channel state) for ``value_iteration`` policies:
+        measured when a ``net_state`` tracker is wired, else observed at
+        the best edge."""
+        if self.net_state is not None:
+            return self.net_state.state_probe()
         return self._best_edge().uplink_state(self.clock())
+
+    def _record_offload(self, now: float, res: DispatchResult) -> None:
+        """Feed one dispatch outcome into the measured network tracker
+        (admitted offloads only — refusals return no round trip)."""
+        if self.net_state is not None and res.outcome == OUTCOME_OFFLOADED:
+            self.net_state.record(now, res.latency, res.breakdown)
 
     def open_session(
         self,
@@ -311,6 +336,12 @@ class OffloadRuntime:
                 res: DispatchResult = self.dispatcher.dispatch(
                     now, d.step, d.estimate
                 )
+                self._record_offload(now, res)
+                if res.outcome == OUTCOME_OFFLOADED:
+                    session.record_rtt(res.latency)
+                    bd0 = res.breakdown
+                    if bd0 is not None and bd0.transmit > 0.0:
+                        session.record_bandwidth(1.0 / bd0.transmit)
                 bd = res.breakdown
                 records.append(
                     StepRecord(
@@ -362,13 +393,15 @@ def simulate(
     arrival_period: float = 1.0,
     set_ratio_at: Optional[Dict[int, float]] = None,
     seed: int = 0,
+    net_state: Optional[Any] = None,
 ) -> StreamTrace:
     """One-call deterministic streaming simulation: 1 weak device emitting
     the given frames toward ``n_edges`` heterogeneous edges (or an explicit
     ``edges`` fleet), decisions via a session over ``engine``."""
     fleet = list(edges) if edges is not None else default_edge_fleet(n_edges, seed)
     runtime = OffloadRuntime(
-        engine, fleet, strategy=strategy, on_saturation=on_saturation, seed=seed
+        engine, fleet, strategy=strategy, on_saturation=on_saturation, seed=seed,
+        net_state=net_state,
     )
     return runtime.serve(
         weak_outputs,

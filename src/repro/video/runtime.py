@@ -280,10 +280,12 @@ class VideoRuntime(OffloadRuntime):
                 outcome = OUTCOME_LOCAL
                 if d.offload:
                     res = self.dispatcher.dispatch(now, t * B + b, d.estimate)
+                    self._record_offload(now, res)
                     outcome, edge, latency, bd = (
                         res.outcome, res.edge, res.latency, res.breakdown,
                     )
                     if res.outcome == OUTCOME_OFFLOADED:
+                        session.record_rtt(res.latency)
                         st["pending"].append((now + res.latency, t))
                         if st["cover_frame"] is None or t > st["cover_frame"]:
                             st["cover_frame"] = t

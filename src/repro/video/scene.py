@@ -65,7 +65,15 @@ class DetectorProfile:
     """Noise model of one detector tier over a clip.  ``flip`` and ``miss``
     are *persistent per object* (sampled once from the object identity), so
     the induced quality signal is temporally correlated like a real weak
-    detector's failure modes."""
+    detector's failure modes.
+
+    ``hard_classes`` makes localization quality *class-conditional*:
+    objects whose true class is listed get ``hard_box_jitter`` corner noise
+    instead of ``box_jitter`` — a detector that is simply bad at certain
+    categories.  Two profiles differing only in the hard set draw identical
+    noise streams (the gaussian scale rescales the same draws), which is
+    what lets a mid-stream swap of the hard set model a pure distribution
+    shift without perturbing anything else in the clip."""
 
     box_jitter: float = 0.6     # per-corner gaussian noise, px
     flip: float = 0.05          # P(object's class is persistently wrong)
@@ -73,6 +81,13 @@ class DetectorProfile:
     hallucinate: float = 0.02   # P(extra spurious detection per frame)
     score_lo: float = 0.55
     score_hi: float = 0.95
+    hard_classes: tuple = ()    # true classes with degraded localization
+    hard_box_jitter: Optional[float] = None  # their corner noise, px
+
+    def jitter_for(self, true_cls: int) -> float:
+        if self.hard_box_jitter is not None and int(true_cls) in self.hard_classes:
+            return self.hard_box_jitter
+        return self.box_jitter
 
 
 #: the two tiers of the paper's weak-device / strong-edge pair
@@ -323,9 +338,11 @@ def synthesize_detections(
                     miss_p[oid] = float(rng.uniform(0.0, 2.0 * profile.miss))
                 if rng.uniform() < miss_p[oid]:
                     continue
+                # scale is applied to the same unit draws, so profiles
+                # differing only in jitter consume identical RNG streams
+                sigma = profile.jitter_for(int(clip.classes[t, b, slot]))
                 d_boxes.append(
-                    clip.boxes[t, b, slot]
-                    + rng.normal(0.0, profile.box_jitter, 4)
+                    clip.boxes[t, b, slot] + rng.normal(0.0, sigma, 4)
                 )
                 d_scores.append(rng.uniform(profile.score_lo, profile.score_hi))
                 d_cls.append(flip_cls[oid])

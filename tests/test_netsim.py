@@ -230,11 +230,28 @@ if given is not None:
         assert st["delivered"] == st["enqueued"]
         assert st["occupancy"] == 0
 
-else:  # pragma: no cover - exercised only without hypothesis
+else:
 
-    @pytest.mark.skip(reason="hypothesis not installed")
-    def test_uplink_queue_conservation_property():
-        pass
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_uplink_queue_conservation_property(seed):
+        """Deterministic stand-in for the hypothesis form above (hypothesis
+        is not installed in this environment): the same conservation law —
+        delivered + dropped partition the offered frames — over seeded
+        random depths, bandwidths, and arrival patterns."""
+        rng = np.random.default_rng(seed)
+        depth = int(rng.integers(1, 7))
+        bandwidth = float(rng.uniform(0.2, 3.0))
+        n = int(rng.integers(1, 41))
+        q = UplinkQueue(ConstantRateLink(bandwidth), depth=depth)
+        t = 0.0
+        for i in range(n):
+            t += float(rng.uniform(0.0, 2.0))
+            q.enqueue(t, i, float(rng.uniform(0.0, 4.0)))
+        q.poll(1e12)
+        stats = q.stats()
+        assert stats["delivered"] + stats["dropped"] == n
+        assert stats["delivered"] == stats["enqueued"]
+        assert stats["occupancy"] == 0
 
 
 # -------------------------------------------------------- queue_aware policy

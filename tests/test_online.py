@@ -1,0 +1,607 @@
+"""repro.online: closed-loop adaptation.
+
+Covers the subsystem bottom-up — streaming quantiles, replay buffer,
+last-layer solver, drift detector, measured network estimation, the
+adaptive policy — then the two acceptance claims:
+
+- **headline**: on the seeded mid-stream distribution shift, the adaptive
+  arm's post-shift effective accuracy strictly exceeds the frozen arm's at
+  (approximately) equal realized offload ratio;
+- **measured RTT**: queue_aware driven by the measured NetworkEstimator is
+  within 5% of the oracle-probe latency on the congested-fleet scenario.
+"""
+import numpy as np
+import pytest
+
+from repro.api import MLPRewardModel, OffloadEngine
+from repro.api.policies import list_policies, make_policy
+from repro.core import EstimatorConfig
+from repro.core.reward import CdfTransform
+from repro.online import (
+    AdaptiveEngine,
+    DriftConfig,
+    DriftDetector,
+    LastLayerSolver,
+    NetworkEstimator,
+    OnlineConfig,
+    ReplayBuffer,
+    StreamingQuantiles,
+    apply_last_layer,
+    clone_engine,
+    default_shift_scenario,
+    hidden_features,
+    reward_to_logit,
+    run_shift_scenario,
+)
+from repro.runtime import default_congested_fleet, simulate
+from repro.runtime.edge import LatencyBreakdown
+
+
+# ---------------------------------------------------------------------------
+# StreamingQuantiles
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_quantiles_track_normal_stream():
+    rng = np.random.default_rng(0)
+    xs = rng.normal(0.0, 1.0, 4000)
+    t = StreamingQuantiles(65)
+    t.update_batch(xs)
+    for q in (0.1, 0.25, 0.5, 0.75, 0.9):
+        assert abs(t.quantile(q) - np.quantile(xs, q)) < 0.1
+    cal = t.calibration_scores()
+    assert np.all(np.diff(cal) >= 0)  # marker heights stay sorted
+
+
+def test_streaming_quantiles_adapt_after_warm_start():
+    rng = np.random.default_rng(1)
+    t = StreamingQuantiles(33).warm_start(rng.normal(0.0, 1.0, 200))
+    before = t.quantile(0.5)
+    assert abs(before) < 0.2
+    t.update_batch(rng.normal(3.0, 0.5, 3000))
+    assert abs(t.quantile(0.5) - 3.0) < 0.25  # markers followed the shift
+
+
+def test_streaming_quantiles_state_roundtrip_continues_identically():
+    rng = np.random.default_rng(2)
+    t = StreamingQuantiles(17)
+    t.update_batch(rng.normal(size=120))
+    clone = StreamingQuantiles.from_state(t.state())
+    more = rng.normal(size=150)
+    t.update_batch(more)
+    clone.update_batch(more)
+    np.testing.assert_array_equal(t.heights, clone.heights)
+    np.testing.assert_array_equal(t.positions, clone.positions)
+    assert t.count == clone.count
+
+
+def test_streaming_quantiles_cdf_transform_roundtrip():
+    rng = np.random.default_rng(3)
+    sample = rng.normal(0.0, 1.0, 800)
+    base = CdfTransform(sample)
+    t = StreamingQuantiles.from_transform(base, n_markers=65)
+    back = t.to_transform()
+    grid = np.linspace(-2.0, 2.0, 41)
+    got, ref = back(grid), base(grid)
+    assert np.all(got >= 0.0) and np.all(got <= 1.0)
+    assert np.all(np.diff(got) >= -1e-12)
+    np.testing.assert_allclose(got, ref, atol=0.05)
+
+
+def test_streaming_quantiles_seed_buffer_until_enough():
+    t = StreamingQuantiles(9)
+    for v in range(5):
+        t.update(float(v))
+    assert not t.initialized  # still buffering exact samples
+    for v in range(5, 12):
+        t.update(float(v))
+    assert t.initialized
+    assert abs(t.quantile(0.0) - 0.0) < 1e-9
+    assert abs(t.quantile(1.0) - 11.0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# ReplayBuffer
+# ---------------------------------------------------------------------------
+
+
+def test_replay_buffer_wraps_oldest_first():
+    buf = ReplayBuffer(capacity=4, feature_dim=2)
+    for i in range(6):
+        buf.append(np.full(2, float(i)), float(i))
+    assert len(buf) == 4 and buf.count == 6
+    x, y = buf.data()
+    np.testing.assert_array_equal(y, [2.0, 3.0, 4.0, 5.0])
+    np.testing.assert_array_equal(x[:, 0], [2.0, 3.0, 4.0, 5.0])
+
+
+def test_replay_buffer_rejects_mismatched_blocks():
+    buf = ReplayBuffer(capacity=4, feature_dim=3)
+    with pytest.raises(ValueError):
+        buf.append(np.zeros((2, 3)), np.zeros(3))
+    with pytest.raises(ValueError):
+        buf.append(np.zeros((2, 5)), np.zeros(2))
+
+
+def test_replay_buffer_state_roundtrip_keeps_cursor():
+    buf = ReplayBuffer(capacity=3, feature_dim=1)
+    for i in range(5):
+        buf.append(np.asarray([float(i)]), float(i))
+    clone = ReplayBuffer.from_state(buf.state())
+    buf.append(np.asarray([9.0]), 9.0)
+    clone.append(np.asarray([9.0]), 9.0)
+    np.testing.assert_array_equal(buf.data()[1], clone.data()[1])
+    assert buf.cursor == clone.cursor and buf.count == clone.count
+
+
+# ---------------------------------------------------------------------------
+# last-layer solver
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted_engine():
+    """A small fitted engine with the deployable fused-MLP shape."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(0.0, 1.0, (256, 12)).astype(np.float32)
+    r = 1.5 * x[:, 0] - 0.5 * x[:, 1] + 0.2 * rng.normal(size=256)
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(16,), epochs=8, batch_size=64, seed=0)
+        ),
+        ratio=0.3,
+    )
+    eng.fit(features=x, rewards=r)
+    return eng, x
+
+
+def test_last_layer_solver_recovers_known_head(fitted_engine):
+    eng, x = fitted_engine
+    model = clone_engine(eng).reward_model
+    h = hidden_features(model, x)
+    rng = np.random.default_rng(4)
+    w_true = rng.normal(0.0, 0.5, h.shape[1])
+    b_true = 0.3
+    y = 1.0 / (1.0 + np.exp(-(h @ w_true + b_true)))
+    solver = LastLayerSolver(hidden_dim=h.shape[1], l2=1e-6)
+    solver.ingest(h, reward_to_logit(y))
+    w, b = solver.solve()
+    np.testing.assert_allclose(w, w_true, atol=1e-3)
+    assert abs(b - b_true) < 1e-3
+    apply_last_layer(model, w, b)
+    np.testing.assert_allclose(model.predict(x), y, atol=1e-3)
+
+
+def test_last_layer_solver_forgetting_prefers_recent_blocks(fitted_engine):
+    eng, x = fitted_engine
+    model = eng.reward_model
+    h = hidden_features(model, x)
+    rng = np.random.default_rng(5)
+    w_old = rng.normal(0.0, 0.5, h.shape[1])
+    w_new = rng.normal(0.0, 0.5, h.shape[1])
+    y_old = reward_to_logit(1.0 / (1.0 + np.exp(-(h @ w_old))))
+    y_new = reward_to_logit(1.0 / (1.0 + np.exp(-(h @ w_new))))
+    solver = LastLayerSolver(hidden_dim=h.shape[1], l2=1e-6, forget=0.5)
+    solver.ingest(h, y_old)
+    for _ in range(8):  # old evidence decays by 0.5 per block
+        solver.ingest(h, y_new)
+    w, _ = solver.solve()
+    assert np.linalg.norm(w - w_new) < np.linalg.norm(w - w_old)
+
+
+def test_last_layer_solver_guards():
+    solver = LastLayerSolver(hidden_dim=4)
+    with pytest.raises(RuntimeError):
+        solver.solve()
+    with pytest.raises(ValueError):
+        LastLayerSolver(hidden_dim=4, forget=0.0)
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+
+
+def _residual_stream(n, level, seed, noise=0.05):
+    rng = np.random.default_rng(seed)
+    return level + noise * rng.normal(size=n)
+
+
+def test_drift_steady_selection_bias_does_not_fire():
+    det = DriftDetector(DriftConfig())
+    # offloaded-subset residuals: constant negative offset, small noise
+    for r in _residual_stream(400, level=-0.12, seed=0):
+        det.update(predicted=0.0, realized=r)
+    assert not det.drifted
+    assert det.statistic < 0.5 * det.config.h
+    assert det.ratio_multiplier() == 1.0  # no widening in the noise band
+
+
+def test_drift_detects_level_shift_quickly():
+    det = DriftDetector(DriftConfig())
+    for r in _residual_stream(200, level=-0.12, seed=1):
+        det.update(predicted=0.0, realized=r)
+    fired_after = None
+    for i, r in enumerate(_residual_stream(50, level=0.30, seed=2)):
+        det.update(predicted=0.0, realized=r)
+        if det.drifted:
+            fired_after = i + 1
+            break
+    assert fired_after is not None and fired_after <= 10
+    assert det.ratio_multiplier() > 1.0  # evidence past the gate widens
+
+
+def test_drift_reset_rebaselines_on_new_level():
+    det = DriftDetector(DriftConfig())
+    for r in _residual_stream(200, level=-0.12, seed=3):
+        det.update(predicted=0.0, realized=r)
+    for r in _residual_stream(30, level=0.30, seed=4):
+        det.update(predicted=0.0, realized=r)
+    assert det.drifted
+    det.reset()
+    assert det.events == 1 and det.statistic == 0.0
+    # sustained NEW level is the new normal after the handled refit
+    for r in _residual_stream(150, level=0.30, seed=5):
+        det.update(predicted=0.0, realized=r)
+    assert not det.drifted
+
+
+def test_drift_rebaseline_keeps_cusum_evidence():
+    det = DriftDetector(DriftConfig())
+    for r in _residual_stream(100, level=0.0, seed=6):
+        det.update(predicted=0.0, realized=r)
+    det.cusum_pos = 3.0  # surviving evidence from persistent mispredictions
+    det.rebaseline()
+    assert det.statistic == 3.0  # kept — only the baseline mean re-anchors
+    det.update(predicted=0.0, realized=0.5)
+    assert det.mean == 0.5  # reseeded at the post-update residual level
+
+
+def test_drift_periodic_reset_not_counted_as_event():
+    det = DriftDetector(DriftConfig())
+    for r in _residual_stream(50, level=0.0, seed=7):
+        det.update(predicted=0.0, realized=r)
+    det.reset(count_event=False)
+    assert det.events == 0
+    assert det.settle_until == det.n + det.config.min_obs
+
+
+def test_drift_state_roundtrip_continues_identically():
+    det = DriftDetector(DriftConfig())
+    for r in _residual_stream(90, level=-0.1, seed=8):
+        det.update(predicted=0.0, realized=r)
+    det.reset()
+    clone = DriftDetector.from_state(det.state(), det.config)
+    for r in _residual_stream(120, level=0.2, seed=9):
+        det.update(predicted=0.0, realized=r)
+        clone.update(predicted=0.0, realized=r)
+    assert det.statistic == clone.statistic
+    assert det.mean == clone.mean and det.var == clone.var
+    assert det.settle_until == clone.settle_until and det.n == clone.n
+
+
+def test_drift_ratio_multiplier_gated_and_capped():
+    det = DriftDetector(DriftConfig(h=8.0, widen=1.25))
+    det.cusum_pos = 3.9  # below h/2
+    assert det.ratio_multiplier() == 1.0
+    det.cusum_pos = 6.0  # halfway through the ramp
+    assert 1.0 < det.ratio_multiplier() < 1.25
+    det.cusum_pos = 50.0
+    assert det.ratio_multiplier() == 1.25
+
+
+# ---------------------------------------------------------------------------
+# NetworkEstimator
+# ---------------------------------------------------------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_netstate_send_time_causality():
+    clk = _Clock()
+    net = NetworkEstimator(clock=clk)
+    net.record(t_sent=0.0, rtt=10.0)
+    clk.t = 5.0
+    assert net.rtt() == 0.0  # result not back yet
+    assert net.outstanding == 1
+    clk.t = 10.0
+    assert net.rtt() == 10.0
+    assert net.outstanding == 0
+
+
+def test_netstate_rfc6298_smoothing():
+    clk = _Clock()
+    net = NetworkEstimator(clock=clk)
+    net.record(0.0, 10.0)
+    clk.t = 10.0
+    net.poll()
+    assert net.srtt == 10.0 and net.rttvar == 5.0
+    net.record(10.0, 20.0)
+    clk.t = 30.0
+    net.poll()
+    # RFC 6298: rttvar then srtt, beta=0.25 / alpha=0.125
+    assert net.rttvar == pytest.approx(0.75 * 5.0 + 0.25 * 10.0)
+    assert net.srtt == pytest.approx(0.875 * 10.0 + 0.125 * 20.0)
+
+
+def test_netstate_congestion_is_gated_inflight_census():
+    clk = _Clock()
+    net = NetworkEstimator(clock=clk, parallelism=2, pressure=1.0)
+    net.record(0.0, 4.0, LatencyBreakdown(queue=0.0, transmit=2.0, service=2.0))
+    clk.t = 4.0
+    net.poll()
+    assert net.transmit_ewma == 2.0
+    assert net.congestion() == 0.0  # nothing in flight -> no backlog
+    net.record(4.0, 50.0)
+    assert net.congestion() == 0.0  # one of two uplinks still free
+    net.record(4.0, 50.0)
+    assert net.congestion() == pytest.approx(1.0 * (2 / 2) * 2.0)
+    net.record(4.0, 50.0)
+    assert net.congestion() == pytest.approx(1.0 * (3 / 2) * 2.0)
+
+
+def test_netstate_bandwidth_and_state_probe():
+    clk = _Clock()
+    net = NetworkEstimator(clock=clk, parallelism=1)
+    net.record(0.0, 4.0, LatencyBreakdown(0.0, 2.0, 2.0), bits=8.0)
+    clk.t = 4.0
+    assert net.bandwidth() == pytest.approx(8.0 / 2.0)
+    assert net.state_probe() == (0, 0)  # empty queue, channel at its best
+    # a fade: transmit times triple the best observed
+    for i in range(12):
+        net.record(4.0 + i, 8.0, LatencyBreakdown(0.0, 6.0, 2.0))
+    clk.t = 30.0
+    net.poll()
+    assert net.state_probe()[1] == 1  # channel flagged bad
+
+
+def test_netstate_state_roundtrip_with_pending_samples():
+    clk = _Clock()
+    net = NetworkEstimator(clock=clk, parallelism=2)
+    for i in range(6):
+        net.record(float(i), 3.0 + i, LatencyBreakdown(0.5, 1.0, 1.5 + i))
+    clk.t = 5.0
+    net.poll()
+    assert net.outstanding > 0  # round-trip while samples are still in flight
+    clone = NetworkEstimator.from_state(net.state(), parallelism=2, clock=clk)
+    clk.t = 30.0
+    assert net.telemetry() == clone.telemetry()
+
+
+def test_netstate_ignores_bad_rtt_samples():
+    net = NetworkEstimator()
+    net.record(0.0, float("nan"))
+    net.record(0.0, -1.0)
+    assert net.delivered == 0 and net.rtt() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# adaptive_threshold policy
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_threshold_registered():
+    assert "adaptive_threshold" in list_policies()
+
+
+def test_adaptive_threshold_tracks_ratio_through_shift():
+    rng = np.random.default_rng(6)
+    cal = rng.normal(0.0, 1.0, 128)  # fitted on a distribution that moves
+    policy = make_policy("adaptive_threshold", cal, 0.3)
+    decisions = [policy.decide(float(e)) for e in rng.normal(2.0, 1.0, 600)]
+    assert abs(np.mean(decisions) - 0.3) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveEngine: cadence, save/load, bit-identical replay
+# ---------------------------------------------------------------------------
+
+_FAST = OnlineConfig(
+    buffer_capacity=64,
+    min_observations=8,
+    update_every=4,
+    refit_every=24,
+    refit_epochs=2,
+    seed=0,
+)
+
+
+def _observation_stream(eng, x, seed, n):
+    """Deterministic (features, estimate, reward) triples for feedback."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, x.shape[0], n)
+    est = np.asarray(eng.score(features=x[idx]), np.float64)
+    rewards = rng.uniform(-0.5, 1.5, n)
+    return x[idx], est, rewards
+
+
+def test_adaptive_engine_warmup_then_updates(fitted_engine):
+    eng, x = fitted_engine
+    ada = AdaptiveEngine(clone_engine(eng), _FAST)
+    xs, est, rw = _observation_stream(eng, x, seed=7, n=6)
+    ada.observe(xs, est, rw)
+    report = ada.maybe_update()
+    assert not report.changed  # still below min_observations
+    xs, est, rw = _observation_stream(eng, x, seed=8, n=6)
+    ada.observe(xs, est, rw)
+    report = ada.maybe_update()
+    assert report.incremental and report.recalibrated
+    assert ada.incremental_updates == 1 and ada.observations == 12
+
+
+def test_adaptive_engine_periodic_refit_fires(fitted_engine):
+    eng, x = fitted_engine
+    ada = AdaptiveEngine(clone_engine(eng), _FAST)
+    for i in range(5):
+        xs, est, rw = _observation_stream(eng, x, seed=20 + i, n=6)
+        ada.observe(xs, est, rw)
+        ada.maybe_update()
+    assert ada.refits >= 1
+    assert ada.drift_events == 0  # schedule-driven, not drift-forced
+
+
+def test_adaptive_engine_save_load_roundtrip(fitted_engine, tmp_path):
+    eng, x = fitted_engine
+    ada = AdaptiveEngine(clone_engine(eng), _FAST)
+    for i in range(3):
+        xs, est, rw = _observation_stream(eng, x, seed=30 + i, n=6)
+        ada.observe(xs, est, rw)
+        ada.maybe_update()
+    path = str(tmp_path / "adaptive.npz")
+    ada.save(path)
+    back = AdaptiveEngine.load(path)
+    assert back.config == ada.config
+    assert back.observations == ada.observations
+    assert back.incremental_updates == ada.incremental_updates
+    assert back.refits == ada.refits
+    np.testing.assert_array_equal(back.buffer.data()[0], ada.buffer.data()[0])
+    np.testing.assert_array_equal(
+        back.score_tracker.heights, ada.score_tracker.heights
+    )
+    assert back.drift.statistic == ada.drift.statistic
+    np.testing.assert_array_equal(
+        np.asarray(back.engine.score(features=x)),
+        np.asarray(ada.engine.score(features=x)),
+    )
+
+
+def test_adaptive_engine_load_rejects_plain_engine_artifact(
+    fitted_engine, tmp_path
+):
+    eng, _ = fitted_engine
+    path = str(tmp_path / "plain.npz")
+    eng.save(path)
+    with pytest.raises(ValueError):
+        AdaptiveEngine.load(path)
+
+
+def test_adaptive_engine_replay_from_checkpoint_is_bit_identical(
+    fitted_engine, tmp_path
+):
+    eng, x = fitted_engine
+    ada = AdaptiveEngine(clone_engine(eng), _FAST)
+    for i in range(4):
+        xs, est, rw = _observation_stream(eng, x, seed=40 + i, n=5)
+        ada.observe(xs, est, rw)
+        ada.maybe_update()
+    path = str(tmp_path / "mid.npz")
+    ada.save(path)
+    back = AdaptiveEngine.load(path)
+    # identical continuation (crosses the refit_every boundary in both arms)
+    tail = [_observation_stream(eng, x, seed=50 + i, n=5) for i in range(6)]
+    for xs, est, rw in tail:
+        ada.observe(xs, est, rw)
+        ada.maybe_update()
+    for xs, est, rw in tail:
+        back.observe(xs, est, rw)
+        back.maybe_update()
+    assert back.refits == ada.refits and back.refits >= 1
+    assert back.incremental_updates == ada.incremental_updates
+    a_params = ada.engine.reward_model.estimator.params
+    b_params = back.engine.reward_model.estimator.params
+    for layer in a_params:
+        for leaf in a_params[layer]:
+            np.testing.assert_array_equal(
+                np.asarray(a_params[layer][leaf]),
+                np.asarray(b_params[layer][leaf]),
+            )
+    np.testing.assert_array_equal(
+        np.asarray(ada.engine.score(features=x)),
+        np.asarray(back.engine.score(features=x)),
+    )
+    assert ada.drift.statistic == back.drift.statistic
+
+
+# ---------------------------------------------------------------------------
+# acceptance: measured RTT within 5% of the oracle probes
+# ---------------------------------------------------------------------------
+
+
+def test_measured_netstate_matches_oracle_latency():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0.0, 1.0, (512, 32)).astype(np.float32)
+    r = 2.0 * x[:, 0] + 0.3 * rng.normal(size=512)
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(16,), epochs=10, batch_size=64)
+        ),
+        ratio=0.3,
+    )
+    eng.fit(features=x, rewards=r)
+    qa = eng.with_policy("queue_aware")
+    results = {}
+    for label, net in (("oracle", None), ("measured", NetworkEstimator())):
+        trace = simulate(
+            qa,
+            features=x,
+            edges=default_congested_fleet(3, seed=0),
+            ratio=0.3,
+            micro_batch=1,
+            seed=0,
+            net_state=net,
+        )
+        off = [rec.latency for rec in trace.records if rec.outcome == "offloaded"]
+        results[label] = (
+            float(np.mean(off)),
+            float(np.mean([(rec.latency or 0.0) for rec in trace.records])),
+            len(off),
+        )
+    oracle, measured = results["oracle"], results["measured"]
+    # the measured probes must not cost more than 5% latency vs the oracle
+    assert measured[0] <= oracle[0] * 1.05
+    assert measured[1] <= oracle[1] * 1.05
+    # and the budget controller holds the same offload volume
+    assert abs(measured[2] - oracle[2]) <= 0.1 * oracle[2]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the distribution-shift headline
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def shift_runs():
+    scenario = default_shift_scenario()
+    frozen = run_shift_scenario(scenario)
+    adaptive = run_shift_scenario(scenario, adaptive=True)
+    return frozen, adaptive
+
+
+def test_headline_adaptive_recovers_post_shift_accuracy(shift_runs):
+    frozen, adaptive = shift_runs
+    assert adaptive.mean_effective(post_shift=True) > frozen.mean_effective(
+        post_shift=True
+    )
+    # equal-budget comparison: realized ratios must agree closely
+    assert abs(adaptive.realized_ratio() - frozen.realized_ratio()) <= 0.05
+
+
+def test_headline_adaptive_arm_actually_adapted(shift_runs):
+    _, adaptive = shift_runs
+    up = adaptive.updates
+    assert up["observations"] > 0
+    assert up["incremental_updates"] > 0
+    assert up["refits"] > 0
+    handle = adaptive.adaptive
+    assert handle is not None and handle.observations == up["observations"]
+
+
+def test_headline_frames_served_strong_only_when_offloaded(shift_runs):
+    frozen, adaptive = shift_runs
+    for run in (frozen, adaptive):
+        assert not np.any(run.served_strong & ~run.offload)
+    assert frozen.updates == {}  # the frozen arm never adapts
+
+
+def test_headline_sessions_report_online_telemetry(shift_runs):
+    _, adaptive = shift_runs
+    for tele in adaptive.telemetry:
+        assert tele["rtt_samples"] > 0
+        assert tele["mean_rtt"] > 0.0
+        assert tele["online_updates"] > 0

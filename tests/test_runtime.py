@@ -136,7 +136,9 @@ def test_session_requires_fitted_engine():
 
 def test_session_telemetry_as_dict_byte_stable(threshold_engine):
     """The default ``as_dict`` payload must stay byte-stable for existing
-    consumers: the video counters appear only behind ``include_video``."""
+    consumers: the video counters appear only behind ``include_video``,
+    the measured-network / online-update counters only behind
+    ``include_online``."""
     eng, x = threshold_engine
     session = OffloadSession(eng, micro_batch=4)
     session.submit_batch(features=x[:12])
@@ -151,6 +153,11 @@ def test_session_telemetry_as_dict_byte_stable(threshold_engine):
     session.record_staleness(2.0)
     session.record_staleness(4.0)
     session.record_effective_accuracy(0.5)
+    # nor the online-loop counters
+    session.record_rtt(3.5)
+    session.record_rtt(4.5)
+    session.record_bandwidth(0.5)
+    session.record_update()
     assert session.telemetry.as_dict() == before
     full = session.telemetry.as_dict(include_video=True)
     assert list(full.keys()) == legacy_keys + [
@@ -158,6 +165,15 @@ def test_session_telemetry_as_dict_byte_stable(threshold_engine):
         "mean_effective_accuracy",
     ]
     assert full["covered_frames"] == 2
+    online = session.telemetry.as_dict(include_online=True)
+    assert list(online.keys()) == legacy_keys + [
+        "rtt_samples", "mean_rtt", "bandwidth_samples", "mean_bandwidth",
+        "online_updates",
+    ]
+    assert online["rtt_samples"] == 2
+    assert online["mean_rtt"] == pytest.approx(4.0)
+    assert online["bandwidth_samples"] == 1
+    assert online["online_updates"] == 1
     assert full["mean_staleness"] == pytest.approx(3.0)
     assert full["effective_frames"] == 1
     assert full["mean_effective_accuracy"] == pytest.approx(0.5)
