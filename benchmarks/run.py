@@ -25,6 +25,8 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
   bench_online_update        closed-loop updates/s (incremental last-layer
                              solve vs jitted mini-refit) + NetworkEstimator
                              per-offload overhead
+  bench_fleet_scale          sharded data-plane scoring streams/s at 1 vs N
+                             forced host-device shards (subprocess per view)
   bench_iou                  iou_matrix ref vs Pallas side by side (+ratio)
   bench_kernels              Pallas oracles (jnp path) per-call time
 
@@ -560,6 +562,68 @@ def bench_online_update(n: int = 512, block: int = 8) -> None:
     )
 
 
+_FLEET_SCALE_CHILD = """
+import sys, time
+import numpy as np
+
+n_streams = int(sys.argv[1])
+import jax
+from repro.api import MLPRewardModel, OffloadEngine
+from repro.core import EstimatorConfig
+from repro.fleet import FleetPlane
+
+rng = np.random.default_rng(0)
+x = rng.normal(0, 1, (1024, 387)).astype(np.float32)
+eng = OffloadEngine(
+    reward_model=MLPRewardModel(config=EstimatorConfig(hidden=(128,), epochs=2))
+)
+eng.fit(features=x, rewards=rng.normal(0, 1, 1024))
+plane = FleetPlane()
+feats = rng.normal(0, 1, (n_streams, 387)).astype(np.float32)
+ref = np.asarray(eng.score(features=feats))
+out = np.asarray(plane.score(eng, feats))  # also warms the sharded path
+assert np.array_equal(ref, out), "sharded scoring diverged"
+samples = []
+for _ in range(5):
+    t0 = time.perf_counter()
+    np.asarray(plane.score(eng, feats))
+    samples.append(time.perf_counter() - t0)
+print("RESULT", len(jax.devices()), float(np.median(samples)) * 1e6)
+"""
+
+
+def bench_fleet_scale(n_streams: int = 2048) -> None:
+    """Sharded fleet-plane scoring throughput at 1 vs 4 forced host-device
+    shards.  ``XLA_FLAGS`` must be set before jax initializes, so each
+    device view runs in its own subprocess (compile excluded — the child
+    reports a warmed median); the child also re-checks bit-identity against
+    the single-device engine path.  On a single-core host the scaling is
+    honestly flat; on a multi-core host the fan-out shows."""
+    import sys
+
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "../src"))
+    for shards in (1, 4):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={shards}"
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-c", _FLEET_SCALE_CHILD, str(n_streams)],
+            capture_output=True, text=True, timeout=540, env=env,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"fleet_scale child (shards={shards}) failed:\n{proc.stderr}"
+            )
+        line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+        _, n_dev, us = line.split()
+        us = float(us)
+        emit(
+            f"fleet_scale_shards{shards}", us / n_streams,
+            f"streams_per_s={n_streams / (us / 1e6):.0f};devices={n_dev}",
+            shape={"streams": n_streams, "features": 387, "shards": shards},
+        )
+
+
 def bench_kernels() -> None:
     import jax.numpy as jnp
 
@@ -628,6 +692,7 @@ def registered_benches(interpret=None):
         ("netsim_throughput", bench_netsim_throughput),
         ("video_pipeline", bench_video_pipeline),
         ("online_update", bench_online_update),
+        ("fleet_scale", bench_fleet_scale),
         ("iou", lambda: bench_iou(interpret=interpret)),
         ("kernels", bench_kernels),
     ]

@@ -72,7 +72,8 @@ def _ensure_plugins() -> None:
     Lazy — called at lookup time, when repro.api.policies is fully
     initialized — so there is no import cycle and importing repro.api stays
     cheap."""
-    import repro.netsim.policy  # noqa: F401  (registers on import)
+    import repro.fleet.budget  # noqa: F401  (registers on import)
+    import repro.netsim.policy  # noqa: F401
     import repro.online.policy  # noqa: F401
     import repro.video.policy  # noqa: F401
 

@@ -29,6 +29,7 @@ first) but the matcher and feature kernels only require the mask.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
@@ -99,6 +100,30 @@ class _BoxBatch:
             ),
         )
         return max_boxes, fields
+
+    #: per-field batch-axis padding fills — the same conventions ``from_list``
+    #: uses for the box axis (empty images: zero boxes, class -1, mask False)
+    _IMAGE_FILL = {"boxes": 0.0, "classes": -1, "scores": 0.0, "mask": False}
+
+    def pad_images(self, n_images: int):
+        """The batch extended to ``n_images`` along the *image* axis with
+        empty (all-masked) images — ragged last-shard padding for the
+        sharded data plane (``repro.fleet.plane``).  Padded images match and
+        featurize to all-False/all-zero rows, so cropping after a sharded
+        gather recovers the original results exactly."""
+        B = len(self)
+        if n_images < B:
+            raise ValueError(f"pad_images({n_images}) below batch size {B}")
+        if n_images == B:
+            return self
+        kwargs = {}
+        for f in dataclasses.fields(self):
+            a = getattr(self, f.name)
+            pad = np.full(
+                (n_images - B,) + a.shape[1:], self._IMAGE_FILL[f.name], a.dtype
+            )
+            kwargs[f.name] = np.concatenate([a, pad])
+        return type(self)(**kwargs)
 
     def __len__(self) -> int:
         return self.boxes.shape[0]

@@ -9,17 +9,50 @@ paper's local-device/edge-tier split, where the `pod` axis separates tiers.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 AxisVal = Union[None, str, Tuple[str, ...]]
 
+#: the serving mesh axis streams shard over (see ``repro.fleet``)
+FLEET_AXIS = "shard"
+
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The full-scale training/serving mesh — 256 chips (single pod) or
+    2x256 (multi-pod).
+
+    Degrades gracefully when fewer devices are visible (single-host CPU
+    CI): the available devices fold into the ``data`` axis with the other
+    axes at size 1, so the axis *names* — and therefore every logical
+    sharding rule — stay valid; size-1 axes simply replicate."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n_avail = len(jax.devices())
+    if n_avail < int(np.prod(shape)):
+        shape = (1, n_avail, 1) if multi_pod else (n_avail, 1)
     return jax.make_mesh(shape, axes)
+
+
+def make_fleet_mesh(n_shards: Optional[int] = None, *, axis: str = FLEET_AXIS) -> Mesh:
+    """A 1-D city-scale *serving* mesh: ``n_shards`` devices along one
+    ``"shard"`` axis, streams sharded over it (see ``repro.fleet.plane``).
+
+    Built for CPU host-device fan-out: under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` every host
+    thread pool slice becomes a shard.  ``n_shards=None`` takes every
+    visible device; asking for more shards than devices clamps to the
+    available count (a 1-device CI run gets a 1-shard mesh and the sharded
+    data plane degrades to the single-device path)."""
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else int(n_shards)
+    if n < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n = min(n, len(devices))
+    return Mesh(np.array(devices[:n]), (axis,))
 
 
 def logical_axes(*, multi_pod: bool = False) -> Dict[str, AxisVal]:

@@ -51,7 +51,10 @@ class SessionTelemetry:
     ``online_updates``) follow the same pattern behind ``include_online``:
     they stay zero unless the runtime records measured round trips
     (``record_rtt``/``record_bandwidth``) or closed-loop model updates
-    (``record_update``)."""
+    (``record_update``).  The fleet counters (``budget_share``/
+    ``budget_redistributions``) sit behind ``include_fleet`` the same way:
+    zero unless a fleet runtime records the stream's coordinated budget
+    state (``record_budget_share``/``record_redistribution``)."""
 
     processed: int
     offloaded: int
@@ -71,9 +74,14 @@ class SessionTelemetry:
     bandwidth_samples: int = 0
     mean_bandwidth: float = 0.0
     online_updates: int = 0
+    budget_share: float = 0.0
+    budget_redistributions: int = 0
 
     def as_dict(
-        self, include_video: bool = False, include_online: bool = False
+        self,
+        include_video: bool = False,
+        include_online: bool = False,
+        include_fleet: bool = False,
     ) -> Dict[str, Any]:
         out = {
             "processed": self.processed,
@@ -103,6 +111,13 @@ class SessionTelemetry:
                     "bandwidth_samples": self.bandwidth_samples,
                     "mean_bandwidth": self.mean_bandwidth,
                     "online_updates": self.online_updates,
+                }
+            )
+        if include_fleet:
+            out.update(
+                {
+                    "budget_share": self.budget_share,
+                    "budget_redistributions": self.budget_redistributions,
                 }
             )
         return out
@@ -212,6 +227,8 @@ class OffloadSession:
         self._bandwidth_sum = 0.0
         self._bandwidth_samples = 0
         self._online_updates = 0
+        self._budget_share = 0.0
+        self._budget_redistributions = 0
 
     # ------------------------------------------------------------- streaming
 
@@ -285,6 +302,27 @@ class OffloadSession:
         self._pending = [tail] if tail.shape[0] else []
         self._pending_rows = tail.shape[0]
         estimates = np.asarray(self.engine.score(features=head), np.float64).ravel()
+        return self._decide(estimates)
+
+    def submit_scored(self, estimates: np.ndarray) -> List[StepDecision]:
+        """Decide a block of already-scored frames in arrival order — the
+        seam for fleet runtimes that score all streams centrally through the
+        sharded data plane (``repro.fleet.plane``) and fan the estimates out
+        to per-shard sessions.  Mixing with buffered unscored arrivals would
+        let scored frames jump the queue, so pending rows must be flushed
+        first."""
+        if self._pending_rows:
+            raise RuntimeError(
+                f"submit_scored() with {self._pending_rows} unscored frames "
+                "pending — flush() first"
+            )
+        est = np.asarray(estimates, np.float64).ravel()
+        self._next_step += est.size
+        return self._decide(est)
+
+    def _decide(self, estimates: np.ndarray) -> List[StepDecision]:
+        """Run already-scored estimates through the session policy in
+        arrival order and account them in the telemetry."""
         if getattr(self.policy, "batch_budget", False):
             # a per-batch budget (topk) would make streaming decisions
             # depend on micro-batch/flush boundaries (and offload nothing
@@ -377,6 +415,15 @@ class OffloadSession:
         """Account one closed-loop model update visible to this stream."""
         self._online_updates += 1
 
+    def record_budget_share(self, share: float) -> None:
+        """Stamp the stream's current share of the fleet-wide offload
+        budget (see :class:`repro.fleet.budget.FleetBudget`)."""
+        self._budget_share = float(share)
+
+    def record_redistribution(self) -> None:
+        """Account one fleet budget redistribution applied to this stream."""
+        self._budget_redistributions += 1
+
     # ------------------------------------------------------------- telemetry
 
     @property
@@ -416,4 +463,6 @@ class OffloadSession:
                 else 0.0
             ),
             online_updates=self._online_updates,
+            budget_share=self._budget_share,
+            budget_redistributions=self._budget_redistributions,
         )

@@ -148,9 +148,13 @@ class StreamTrace:
         }
 
 
-def default_edge_fleet(n: int = 3, seed: int = 0) -> List[EdgeWorker]:
+def default_edge_fleet(
+    n: int = 3, seed: int = 0, *, prefix: str = "edge"
+) -> List[EdgeWorker]:
     """A seeded heterogeneous fleet: a fast/small edge, then progressively
-    bigger, slower, more rate-limited ones (cycled past n=3)."""
+    bigger, slower, more rate-limited ones (cycled past n=3).  ``prefix``
+    keeps edge names unique when several fleets coexist (one per shard in
+    ``repro.fleet``)."""
     profiles = [
         dict(capacity=2, rate=0.5, burst=2.0,
              latency=EdgeLatencyModel(base=0.5, per_inflight=0.1, jitter=0.05)),
@@ -160,7 +164,7 @@ def default_edge_fleet(n: int = 3, seed: int = 0) -> List[EdgeWorker]:
              latency=EdgeLatencyModel(base=2.0, per_inflight=0.1, jitter=0.1)),
     ]
     return [
-        EdgeWorker(f"edge{i}", seed=seed + i, **profiles[i % len(profiles)])
+        EdgeWorker(f"{prefix}{i}", seed=seed + i, **profiles[i % len(profiles)])
         for i in range(n)
     ]
 
@@ -174,6 +178,7 @@ def default_congested_fleet(
     p_gb: float = 0.08,
     p_bg: float = 0.25,
     bad_slowdown: float = 4.0,
+    prefix: str = "edge",
 ) -> List[EdgeWorker]:
     """A seeded fleet behind congested Gilbert–Elliott uplinks — the netsim
     acceptance scenario.  Each edge's link pushes one frame in
@@ -186,7 +191,7 @@ def default_congested_fleet(
 
     return [
         EdgeWorker(
-            f"edge{i}",
+            f"{prefix}{i}",
             capacity=queue_depth + 4,
             latency=EdgeLatencyModel(base=0.2, per_inflight=0.02, jitter=0.02),
             link=GilbertElliottLink(

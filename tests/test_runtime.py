@@ -138,7 +138,8 @@ def test_session_telemetry_as_dict_byte_stable(threshold_engine):
     """The default ``as_dict`` payload must stay byte-stable for existing
     consumers: the video counters appear only behind ``include_video``,
     the measured-network / online-update counters only behind
-    ``include_online``."""
+    ``include_online``, the fleet budget counters only behind
+    ``include_fleet``."""
     eng, x = threshold_engine
     session = OffloadSession(eng, micro_batch=4)
     session.submit_batch(features=x[:12])
@@ -158,7 +159,16 @@ def test_session_telemetry_as_dict_byte_stable(threshold_engine):
     session.record_rtt(4.5)
     session.record_bandwidth(0.5)
     session.record_update()
+    # nor the fleet budget counters
+    session.record_budget_share(0.4)
+    session.record_redistribution()
     assert session.telemetry.as_dict() == before
+    fleet = session.telemetry.as_dict(include_fleet=True)
+    assert list(fleet.keys()) == legacy_keys + [
+        "budget_share", "budget_redistributions",
+    ]
+    assert fleet["budget_share"] == pytest.approx(0.4)
+    assert fleet["budget_redistributions"] == 1
     full = session.telemetry.as_dict(include_video=True)
     assert list(full.keys()) == legacy_keys + [
         "covered_frames", "mean_staleness", "effective_frames",

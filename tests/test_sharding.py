@@ -1,5 +1,12 @@
 """Sharding rules + mesh context (1-device CPU view; the 512-device mesh
-is exercised by the dryrun CLI, not here)."""
+is exercised by the dryrun CLI, not here).  The fleet-plane bit-identity
+property runs in a subprocess with a forced multi-device host view — the
+in-process suite deliberately keeps the real 1-device view."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +15,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch.meshctx import bind_mesh, constrain
+from repro.launch.mesh import FLEET_AXIS, make_fleet_mesh, make_production_mesh
 from repro.launch.sharding import (
     CACHE_RULES,
     batch_shardings,
@@ -92,3 +100,169 @@ def test_batch_shardings_positions_3d(mesh1):
     sh = batch_shardings(specs, mesh1, MAPPING)
     assert sh["tokens"].spec[0] == "data"
     assert sh["positions_3d"].spec == P(None, "data", None)
+
+
+# ------------------------------------------------------------ fleet meshes
+
+
+def test_make_fleet_mesh_defaults_and_clamps():
+    """On this 1-device view: None takes the device, oversubscription
+    clamps instead of failing (the CI degrade path)."""
+    mesh = make_fleet_mesh()
+    assert mesh.axis_names == (FLEET_AXIS,)
+    assert mesh.shape[FLEET_AXIS] == len(jax.devices())
+    clamped = make_fleet_mesh(64)
+    assert clamped.shape[FLEET_AXIS] == min(64, len(jax.devices()))
+    with pytest.raises(ValueError):
+        make_fleet_mesh(0)
+
+
+def test_make_production_mesh_degrades_to_available_devices():
+    """Asking for the 256/512-chip mesh on a small host must fold the
+    available devices into the data axis, keeping every axis name."""
+    mesh = make_production_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["data"] == len(jax.devices())
+    assert mesh.shape["model"] == 1
+    multi = make_production_mesh(multi_pod=True)
+    assert multi.axis_names == ("pod", "data", "model")
+    assert multi.shape["pod"] == 1 and multi.shape["model"] == 1
+
+
+def test_fleet_plane_single_device_falls_through():
+    """On a 1-shard mesh the plane must return the exact single-device
+    results (it routes straight to the unsharded implementations)."""
+    from repro.core.features import extract_features_batch
+    from repro.detection.batch import (
+        DetectionsBatch,
+        GroundTruthBatch,
+        match_batch,
+    )
+    from repro.detection.map_engine import Detections, GroundTruth
+    from repro.fleet import FleetPlane
+
+    plane = FleetPlane(make_fleet_mesh(1))
+    assert plane.n_devices == 1
+    r = np.random.default_rng(0)
+    dets = [
+        Detections(
+            np.abs(r.normal(10, 3, (4, 4))), r.uniform(0.1, 1, 4),
+            r.integers(0, 5, 4),
+        )
+        for _ in range(9)
+    ]
+    gts = [
+        GroundTruth(np.abs(r.normal(10, 3, (3, 4))), r.integers(0, 5, 3))
+        for _ in range(9)
+    ]
+    db, gb = DetectionsBatch.from_list(dets), GroundTruthBatch.from_list(gts)
+    ref = match_batch(db, gb)
+    out = plane.match(db, gb)
+    np.testing.assert_array_equal(ref.tp, out.tp)
+    np.testing.assert_array_equal(ref.match_gt, out.match_gt)
+    np.testing.assert_array_equal(
+        extract_features_batch(db, 5, 10, 64.0),
+        plane.extract_features(db, 5, 10, 64.0),
+    )
+
+
+def test_fleet_plane_rejects_multi_axis_mesh(mesh1):
+    from repro.fleet import FleetPlane
+
+    with pytest.raises(ValueError):
+        FleetPlane(mesh1)  # ("data", "model") is not a 1-D serving mesh
+
+
+_FLEET_PLANE_PROPERTY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+
+    assert len(jax.devices()) == 4, jax.devices()
+
+    from repro.api import MLPRewardModel, OffloadEngine
+    from repro.core import EstimatorConfig
+    from repro.core.features import extract_features_batch
+    from repro.detection.batch import (
+        DetectionsBatch, GroundTruthBatch, match_batch,
+    )
+    from repro.detection.map_engine import Detections, GroundTruth
+    from repro.fleet import FleetPlane
+    from repro.launch.mesh import make_fleet_mesh
+
+    def synth(n_images, seed, num_classes=8, size=64.0):
+        r = np.random.default_rng(seed)
+        dets, gts = [], []
+        for _ in range(n_images):
+            m = int(r.integers(1, 6))
+            b = r.uniform(0, size - 25, (m, 2))
+            wh = r.uniform(5, 20, (m, 2))
+            gts.append(GroundTruth(
+                np.concatenate([b, b + wh], 1), r.integers(0, num_classes, m)
+            ))
+            k = int(r.integers(0, 12))
+            b = r.uniform(0, size - 25, (k, 2))
+            wh = r.uniform(5, 20, (k, 2))
+            dets.append(Detections(
+                np.concatenate([b, b + wh], 1), r.uniform(0.1, 1.0, k),
+                r.integers(0, num_classes, k),
+            ))
+        return dets, gts
+
+    mesh = make_fleet_mesh()
+    assert mesh.shape["shard"] == 4
+    plane = FleetPlane(mesh)
+
+    # B=13: global grid_b == 1; B=150: grid_b >= 2 — the two XLA:CPU
+    # compilation regimes of the batched IoU kernel.  Both are ragged
+    # against the 4-way shard split (13 = 4+4+4+1, 150 = 38*3+36).
+    for B in (13, 150):
+        dets, gts = synth(B, seed=B)
+        db = DetectionsBatch.from_list(dets)
+        gb = GroundTruthBatch.from_list(gts)
+        ref = match_batch(db, gb, (0.5, 0.75))
+        out = plane.match(db, gb, (0.5, 0.75))
+        assert np.array_equal(ref.tp, out.tp), B
+        assert np.array_equal(ref.match_gt, out.match_gt), B
+        fref = extract_features_batch(db, 8, 25, 64.0)
+        fout = plane.extract_features(db, 8, 25, 64.0)
+        assert np.array_equal(fref, fout), B
+
+    # fused estimator scoring, ragged (B=250 over 4 shards) and aligned
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (256, 32)).astype(np.float32)
+    eng = OffloadEngine(reward_model=MLPRewardModel(
+        config=EstimatorConfig(hidden=(16,), epochs=2, batch_size=64)
+    ))
+    eng.fit(features=x, rewards=rng.normal(0, 1, 256))
+    assert eng.reward_model.fused
+    for B in (7, 250, 256):
+        ref = np.asarray(eng.score(features=x[:B]))
+        out = plane.score(eng, x[:B])
+        assert np.array_equal(ref, out), B
+
+    print("FLEET-PLANE-BITIDENT-OK")
+    """
+)
+
+
+def test_fleet_plane_sharded_is_bit_identical_multi_device():
+    """The PR's core property: scoring, matching, and feature extraction
+    through the 4-device sharded plane are bit-for-bit equal to the
+    single-device results, including ragged last-shard padding, in both
+    IoU-grid compilation regimes.  Runs in a subprocess because the forced
+    multi-device host view must be set before jax initializes."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the script sets its own
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _FLEET_PLANE_PROPERTY],
+        capture_output=True, text=True, timeout=540, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "FLEET-PLANE-BITIDENT-OK" in proc.stdout
