@@ -26,7 +26,7 @@ import glob
 import json
 import os
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 ART = os.path.join(os.path.dirname(__file__), "../artifacts")
 
@@ -38,14 +38,37 @@ def latest_artifacts(art_dir: str, n: int = 2) -> List[str]:
     return paths[-n:]
 
 
-def load_medians(path: str) -> Tuple[str, Dict[str, float]]:
+def load_medians(
+    path: str,
+) -> Tuple[str, Dict[str, float], Dict[str, Dict[str, float]]]:
+    """(rev, name→median_ms, name→stage→median_ms) for one artifact; the
+    stage map only has entries for benches that emitted a breakdown."""
     with open(path) as f:
         payload = json.load(f)
-    medians = {
-        b["name"]: float(b["median_ms"])
-        for b in payload.get("benches", [])
+    benches = payload.get("benches", [])
+    medians = {b["name"]: float(b["median_ms"]) for b in benches}
+    stages = {
+        b["name"]: {k: float(v) for k, v in b["stages"].items()}
+        for b in benches
+        if b.get("stages")
     }
-    return payload.get("rev", os.path.basename(path)), medians
+    return payload.get("rev", os.path.basename(path)), medians, stages
+
+
+def worst_stage(
+    prev: Dict[str, float], cur: Dict[str, float]
+) -> Optional[str]:
+    """``"stage (+delta%)"`` for the most-regressed stage shared by two
+    per-stage breakdowns, or ``None`` when they share nothing usable."""
+    worst: Optional[Tuple[str, float]] = None
+    for name in sorted(set(prev) & set(cur)):
+        p, c = prev[name], cur[name]
+        if p <= 0.0:
+            continue
+        delta = (c - p) / p
+        if worst is None or delta > worst[1]:
+            worst = (name, delta)
+    return None if worst is None else f"{worst[0]} ({worst[1]:+.1%})"
 
 
 def compare(
@@ -53,8 +76,12 @@ def compare(
     cur: Dict[str, float],
     threshold: float,
     min_ms: float,
+    prev_stages: Optional[Dict[str, Dict[str, float]]] = None,
+    cur_stages: Optional[Dict[str, Dict[str, float]]] = None,
 ) -> Tuple[List[str], List[str], int]:
-    """(regressions, improvements, n_compared) between two median maps."""
+    """(regressions, improvements, n_compared) between two median maps.
+    When both runs carry a per-stage breakdown for a regressed bench, the
+    regression line names the stage that slowed down most."""
     regressions: List[str] = []
     improvements: List[str] = []
     compared = 0
@@ -66,6 +93,12 @@ def compare(
         delta = (c - p) / p
         line = f"{name}: {p:.3f}ms -> {c:.3f}ms ({delta:+.1%})"
         if delta > threshold:
+            if prev_stages and cur_stages:
+                culprit = worst_stage(
+                    prev_stages.get(name, {}), cur_stages.get(name, {})
+                )
+                if culprit is not None:
+                    line += f" — worst stage: {culprit}"
             regressions.append(line)
         elif delta < -threshold:
             improvements.append(line)
@@ -92,9 +125,11 @@ def main(argv=None) -> int:
             "need two to compare, nothing to gate"
         )
         return 0
-    (prev_rev, prev), (cur_rev, cur) = (load_medians(p) for p in paths)
+    (prev_rev, prev, prev_stages), (cur_rev, cur, cur_stages) = (
+        load_medians(p) for p in paths
+    )
     regressions, improvements, compared = compare(
-        prev, cur, args.threshold, args.min_ms
+        prev, cur, args.threshold, args.min_ms, prev_stages, cur_stages
     )
     print(
         f"# comparing {prev_rev} -> {cur_rev}: {compared} benches above "

@@ -16,6 +16,8 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
   bench_oric_batch           vectorized oric_batch vs per-image loop
   bench_match_batch          batched device matcher vs per-image Python
   bench_features_batch       batched feature kernel vs per-image Python
+  bench_score_pipeline       fused boxes→estimates dispatch vs the composed
+                             features→score route (+ per-stage breakdown)
   bench_engine_score         OffloadEngine fused-Pallas batched scoring
   bench_dispatcher_throughput  streaming OffloadRuntime end-to-end frames/s
   bench_netsim_throughput    congested GE-linked fleet frames/s + the
@@ -57,13 +59,25 @@ ROWS: List[str] = []
 BENCHES: List[Dict] = []
 
 
-def emit(name: str, us: float, derived: str, shape: Optional[Dict] = None) -> None:
+def emit(
+    name: str,
+    us: float,
+    derived: str,
+    shape: Optional[Dict] = None,
+    stages: Optional[Dict[str, float]] = None,
+) -> None:
+    """Record one bench row; ``stages`` is an optional per-stage breakdown
+    (median ms per stage) carried into ``BENCH_<rev>.json`` so
+    ``benchmarks/compare.py`` can name the stage that regressed."""
     row = f"{name},{us:.1f},{derived}"
     ROWS.append(row)
-    BENCHES.append(
-        {"name": name, "median_ms": round(us / 1e3, 6), "derived": derived,
-         "shape": shape or {}}
-    )
+    entry = {
+        "name": name, "median_ms": round(us / 1e3, 6), "derived": derived,
+        "shape": shape or {},
+    }
+    if stages:
+        entry["stages"] = {k: round(v, 6) for k, v in stages.items()}
+    BENCHES.append(entry)
     print(row)
 
 
@@ -320,6 +334,58 @@ def bench_features_batch(n_images: int = 512, num_classes: int = 8) -> None:
     )
 
 
+def bench_score_pipeline(n_images: int = 512, num_classes: int = 8) -> None:
+    """The fused device-resident boxes→estimates dispatch
+    (``engine.score_device``) vs the composed ``extract_features_batch →
+    engine.score`` route at serve-block scale, with the per-stage
+    breakdown (iou / features / mlp / fused, median ms) recorded in the
+    bench JSON so ``benchmarks/compare.py`` can name a regressing stage."""
+    import jax.numpy as jnp
+
+    from repro.api import DetectionBoxFeatures, OffloadEngine
+    from repro.core.features import extract_features_batch
+    from repro.detection.batch import DetectionsBatch
+    from repro.kernels.iou_matrix import iou_matrix_batch
+
+    dets, _ = _synthetic_detections(n_images, seed=2, num_classes=num_classes)
+    db = DetectionsBatch.from_list(dets)
+    fx = DetectionBoxFeatures(num_classes=num_classes, top_k=25, image_size=64.0)
+    rng = np.random.default_rng(0)
+    xcal = extract_features_batch(db, num_classes, 25, 64.0)
+    eng = OffloadEngine(feature_extractor=fx, ratio=0.3)
+    eng.fit(features=xcal, rewards=rng.uniform(0, 1, n_images))
+
+    def composed():
+        return eng.score(features=extract_features_batch(db, num_classes, 25, 64.0))
+
+    def fused():
+        return np.asarray(eng.score_device(db))
+
+    # warm both paths and pin the bit-identity contract while we're here
+    assert np.array_equal(composed(), fused()), "fused path diverged from composed"
+    us_comp = _timeit(composed, n=10)
+    us_fused = _timeit(fused, n=10)
+    us_feat = _timeit(
+        lambda: extract_features_batch(db, num_classes, 25, 64.0), n=10
+    )
+    us_mlp = _timeit(lambda: eng.score(features=xcal), n=10)
+    boxes = jnp.asarray(db.boxes)
+    iou_matrix_batch(boxes, boxes).block_until_ready()
+    us_iou = _timeit(
+        lambda: iou_matrix_batch(boxes, boxes).block_until_ready(), n=10
+    )
+    speedup = us_comp / max(us_fused, 1e-9)
+    emit(
+        f"score_pipeline_b{n_images}", us_fused,
+        f"composed_us={us_comp:.0f};speedup={speedup:.2f}x"
+        f";frames_per_s={n_images / (us_fused / 1e6):.0f}",
+        shape={"images": n_images, "max_det": int(db.max_boxes),
+               "top_k": 25, "num_classes": num_classes},
+        stages={"iou": us_iou / 1e3, "features": us_feat / 1e3,
+                "mlp": us_mlp / 1e3, "fused": us_fused / 1e3},
+    )
+
+
 def bench_engine_score() -> None:
     """OffloadEngine batched scoring through the fused Pallas MLP path."""
     from repro.api import MLPRewardModel, OffloadEngine
@@ -434,13 +500,17 @@ def bench_netsim_throughput() -> None:
 
 
 def bench_iou(n: int = 512, m: int = 512, interpret=None) -> None:
-    """iou_matrix jnp reference vs the Pallas kernel, side by side, with the
-    pallas/ref ratio — ``interpret`` threads through to the kernel wrapper
-    (None = backend auto: compiled on TPU, interpreter on CPU)."""
+    """iou_matrix jnp reference vs the dispatched kernel, side by side, with
+    the dispatch/ref ratio — ``interpret`` threads through to the kernel
+    wrapper (None = backend auto: compiled Pallas on TPU/GPU, the jitted
+    jnp reference on CPU where the interpreter cannot win; see
+    ``repro.kernels.dispatch``).  On the auto reference path the ratio is
+    asserted ~1x — the fallback must never reintroduce the old
+    pallas-slower-than-ref regression."""
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels.iou_matrix import iou_matrix, iou_matrix_ref, resolve_interpret
+    from repro.kernels.iou_matrix import iou_matrix, iou_matrix_ref, resolve_path
 
     rng = np.random.default_rng(0)
     a = jnp.asarray(np.concatenate([rng.uniform(0, 50, (n, 2))] * 2, 1), jnp.float32)
@@ -450,14 +520,20 @@ def bench_iou(n: int = 512, m: int = 512, interpret=None) -> None:
     f(a, b).block_until_ready()
     us_ref = _timeit(lambda: f(a, b).block_until_ready(), n=20)
     emit(f"kernel_iou_ref_{n}x{m}", us_ref, "jnp_oracle", shape=shape)
-    mode = "interpret" if resolve_interpret(interpret) else "compiled"
+    mode = resolve_path(interpret)
     iou_matrix(a, b, interpret=interpret).block_until_ready()
     us_pal = _timeit(
         lambda: iou_matrix(a, b, interpret=interpret).block_until_ready(), n=20
     )
+    ratio = us_pal / max(us_ref, 1e-9)
+    if mode == "reference":
+        assert ratio < 1.25, (
+            f"auto iou dispatch ({ratio:.2f}x) slower than the jnp reference "
+            f"it resolves to — dispatch overhead regression"
+        )
     emit(
         f"kernel_iou_pallas_{n}x{m}", us_pal,
-        f"mode={mode};pallas_over_ref={us_pal / max(us_ref, 1e-9):.2f}x",
+        f"mode={mode};pallas_over_ref={ratio:.2f}x",
         shape=shape,
     )
 
@@ -687,6 +763,7 @@ def registered_benches(interpret=None):
     smoke = [
         ("match_batch", bench_match_batch),
         ("features_batch", bench_features_batch),
+        ("score_pipeline", bench_score_pipeline),
         ("engine_score", bench_engine_score),
         ("dispatcher_throughput", bench_dispatcher_throughput),
         ("netsim_throughput", bench_netsim_throughput),

@@ -19,9 +19,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.api.features import FeatureExtractor, make_feature_extractor
+from repro.api.features import DetectionBoxFeatures, FeatureExtractor, make_feature_extractor
 from repro.api.policies import Policy, make_policy, policy_context_params
 from repro.api.reward_model import (
     MLPRewardModel,
@@ -29,6 +30,8 @@ from repro.api.reward_model import (
     reward_model_from_state,
 )
 from repro.core.reward import CdfTransform
+from repro.detection.batch import DetectionsBatch
+from repro.kernels.score_pipeline import score_pipeline
 from repro.train.checkpoint import load_flat, save_flat
 
 
@@ -144,12 +147,49 @@ class OffloadEngine:
         reward model is the deployable single-hidden-layer MLP)."""
         return np.asarray(self.reward_model.predict(self._features(weak_outputs, features)))
 
+    def _fused_pipeline_ready(self, weak_outputs: Any, features) -> bool:
+        """True when scoring can take the one-dispatch fused pipeline: a
+        padded detection block, the box feature extractor, and the fused
+        single-hidden-layer MLP."""
+        return (
+            features is None
+            and isinstance(weak_outputs, DetectionsBatch)
+            and isinstance(self.feature_extractor, DetectionBoxFeatures)
+            and getattr(self.reward_model, "fused", False)
+        )
+
+    def score_device(
+        self, weak_outputs: Any = None, *, features: Optional[np.ndarray] = None
+    ) -> jnp.ndarray:
+        """``score`` without the host exits: returns device-resident
+        estimates, bit-identical to ``score``.  A padded
+        :class:`DetectionsBatch` under the box extractor + fused MLP runs
+        the whole boxes→estimates pipeline as ONE jitted dispatch
+        (``repro.kernels.score_pipeline``) — no numpy materialization
+        between the feature, standardize, and MLP stages.  Anything else
+        falls through to feature extraction + the model's device predict.
+        """
+        if self._fused_pipeline_ready(weak_outputs, features):
+            fx = self.feature_extractor
+            return score_pipeline(
+                weak_outputs,
+                self.reward_model.pipeline_params(),
+                num_classes=fx.num_classes,
+                top_k=fx.top_k,
+                image_size=fx.image_size,
+            )
+        x = self._features(weak_outputs, features)
+        model = self.reward_model
+        if hasattr(model, "predict_device"):
+            return model.predict_device(x)
+        return jnp.asarray(model.predict(x))
+
     def decide(
         self, weak_outputs: Any = None, *, features: Optional[np.ndarray] = None
     ) -> DecisionBatch:
         if self.policy is None:
             raise RuntimeError("decide() before fit()/load()")
-        est = self.score(weak_outputs, features=features)
+        est = np.asarray(self.score_device(weak_outputs, features=features))
         mask = np.asarray(self.policy.decide_batch(est), bool)
         return DecisionBatch(estimates=est, offload=mask)
 

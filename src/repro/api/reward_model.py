@@ -2,14 +2,17 @@
 
 ``MLPRewardModel`` wraps :class:`repro.core.estimator.RewardEstimator`; when
 the trained MLP has a single hidden layer and a sigmoid head (the deployable
-on-device shape), batched prediction takes the fused Pallas kernel
-``repro.kernels.estimator_mlp`` (interpret-mode fallback off-TPU).  The CNN
-variant from the §V-A input study sits behind the same interface.
+on-device shape), batched prediction takes the fused ``estimator_mlp``
+kernel — compiled Pallas on TPU/GPU, the jitted jnp reference on CPU
+(``interpret=None`` auto, see ``repro.kernels.dispatch``).  ``predict_device``
+is the no-host-copy variant the serve runtime and the fused score pipeline
+build on.  The CNN variant from the §V-A input study sits behind the same
+interface.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
+from typing import Any, Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +25,7 @@ from repro.core.estimator import (
     cnn_init,
 )
 from repro.kernels.estimator_mlp import estimator_mlp
+from repro.kernels.score_pipeline.ops import pipeline_params
 from repro.train.adamw import adamw_init, adamw_update
 
 
@@ -50,7 +54,7 @@ class MLPRewardModel:
         in_dim: Optional[int] = None,
         config: Optional[EstimatorConfig] = None,
         use_fused: bool = True,
-        interpret: bool = True,
+        interpret: Union[None, bool, str] = None,
     ):
         self.config = config if config is not None else EstimatorConfig(hidden=(128,))
         self.in_dim = in_dim
@@ -59,6 +63,8 @@ class MLPRewardModel:
         self.estimator: Optional[RewardEstimator] = (
             RewardEstimator(in_dim, self.config) if in_dim is not None else None
         )
+        # (source leaves, bundle) — see pipeline_params()
+        self._pipeline_cache: Optional[Tuple[Tuple, Dict[str, jnp.ndarray]]] = None
 
     def _ensure(self, in_dim: int) -> RewardEstimator:
         if self.estimator is None:
@@ -102,6 +108,53 @@ class MLPRewardModel:
                 interpret=self.interpret,
             )
         )
+
+    def predict_device(self, x) -> jnp.ndarray:
+        """``predict`` without the host exit: takes host or device features,
+        returns a device array — bit-identical to ``predict`` (elementwise
+        standardize + the same ``estimator_mlp`` dispatch).  Callers convert
+        once at the policy boundary."""
+        if self.estimator is None:
+            raise RuntimeError("predict_device() before fit()")
+        est = self.estimator
+        if not self.fused:
+            return jnp.asarray(est.predict(np.asarray(x, np.float32)))
+        x = jnp.asarray(x, jnp.float32)
+        if self.config.standardize:
+            x = (x - jnp.asarray(est._mu)) / jnp.asarray(est._sigma)
+        p = est.params
+        return estimator_mlp(
+            x,
+            p["layer0"]["w"],
+            p["layer0"]["b"],
+            p["layer1"]["w"][:, 0],
+            p["layer1"]["b"][0],
+            interpret=self.interpret,
+        )
+
+    def pipeline_params(self) -> Dict[str, jnp.ndarray]:
+        """Param bundle for ``repro.kernels.score_pipeline`` (requires the
+        fused shape), cached by the *identity* of the source leaves: the
+        online update path installs fresh layer dicts/arrays (jnp arrays
+        are immutable), so any weight change misses the cache and rebuilds.
+        This keeps the per-block serve path free of the eager slicing /
+        device transfers a rebuild costs."""
+        est = self.estimator
+        if not self.fused:
+            return pipeline_params(self)  # raises with the explanatory message
+        p = est.params
+        srcs = (
+            est,
+            p["layer0"]["w"], p["layer0"]["b"],
+            p["layer1"]["w"], p["layer1"]["b"],
+            est._mu, est._sigma,
+        )
+        cached = self._pipeline_cache
+        if cached is not None and all(a is b for a, b in zip(cached[0], srcs)):
+            return cached[1]
+        bundle = pipeline_params(self)
+        self._pipeline_cache = (srcs, bundle)
+        return bundle
 
     def state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         if self.estimator is None:

@@ -73,10 +73,14 @@ def extract_features(
     return np.concatenate([feats.reshape(-1), glob, hist])
 
 
-@functools.partial(jax.jit, static_argnames=("num_classes", "top_k"))
-def _features_kernel(boxes, scores, classes, mask, image_size, num_classes, top_k):
+def box_feature_stack(boxes, scores, classes, mask, image_size, num_classes, top_k):
     """One batched pass: top-k selection + per-box features + global stats,
-    all masked ops over the padded (B, K) struct-of-arrays."""
+    all masked ops over the padded (B, K) struct-of-arrays.
+
+    Pure traceable jnp (unjitted) so the fused score pipeline
+    (``repro.kernels.score_pipeline``) can inline it into one end-to-end
+    jit with the standardize + MLP stages; ``_features_kernel`` below is
+    the standalone jitted form everything else calls."""
     # top-k by confidence; invalid slots sink with -inf keys, ties keep the
     # original slot order (stable)
     keys = jnp.where(mask, scores, -jnp.inf)
@@ -117,6 +121,11 @@ def _features_kernel(boxes, scores, classes, mask, image_size, num_classes, top_
     glob = jnp.where(nonempty[:, None], glob, 0.0)
     B = scores.shape[0]
     return jnp.concatenate([feats.reshape(B, -1), glob, hist], axis=1)
+
+
+_features_kernel = functools.partial(
+    jax.jit, static_argnames=("num_classes", "top_k")
+)(box_feature_stack)
 
 
 def extract_features_batch(

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +39,7 @@ import numpy as np
 from jax import lax
 
 from repro.detection.map_engine import Detections, GroundTruth, ImageEval
-from repro.kernels.iou_matrix.ops import iou_matrix_batch, resolve_interpret
+from repro.kernels.iou_matrix.ops import iou_matrix_batch, resolve_path
 
 
 def _pad_dim(n: int, multiple: int = 8) -> int:
@@ -261,7 +261,7 @@ def match_batch(
     gt: GroundTruthBatch,
     iou_thresholds: Sequence[float] = (0.5,),
     *,
-    interpret: Optional[bool] = None,
+    interpret: Union[None, bool, str] = None,
     tile_b: int = 8,
     tile_n: int = 128,
     tile_m: int = 128,
@@ -269,15 +269,16 @@ def match_batch(
     """Batched COCO greedy matching on device; tp flags are identical to
     per-image :func:`repro.detection.map_engine.match_detections`.
 
-    The per-image IoU runs through the ``iou_matrix`` Pallas kernel
-    (``interpret=None`` auto-selects compiled vs interpreter mode), the
-    greedy assignment through one ``lax.scan`` over score-ordered slots.
+    The per-image IoU runs through the ``iou_matrix`` dispatch
+    (``interpret=None`` auto-selects the jitted jnp reference on CPU and
+    the compiled Pallas kernel on TPU/GPU), the greedy assignment through
+    one ``lax.scan`` over score-ordered slots.
     """
     if len(det) != len(gt):
         raise ValueError(f"batch size mismatch: {len(det)} dets vs {len(gt)} gts")
     thresholds = jnp.asarray(iou_thresholds, jnp.float32)
-    interp = resolve_interpret(interpret)
-    if interp:
+    interp = resolve_path(interpret)
+    if interp == "interpret":
         # interpreter mode runs one Python step per grid cell: shrink tiles
         # to the (small) padded box axes and batch more images per step so
         # the grid stays short.  Compiled TPU keeps the 128-lane tiles.

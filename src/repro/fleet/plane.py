@@ -19,6 +19,11 @@ block so its batch grid falls in the same regime as the global call's:
 * global grid_b >= 2: shard blocks pad to at least two ``tile_b`` tiles,
   landing in the multi-tile compilation regime — bit-identical again.
 
+The regime machinery only matters on the Pallas paths; on the auto
+``"reference"`` path (CPU default, see ``repro.kernels.dispatch``) the IoU
+is an elementwise ``vmap`` over box pairs, which is trivially shard-safe
+and needs no extra padding.
+
 Downstream of the IoU kernel, greedy matching (``_match_inputs`` /
 ``_greedy_match``) and the feature/MLP kernels are comparisons, sorts and
 per-image/per-row arithmetic, which the equivalence property in
@@ -29,8 +34,9 @@ mesh, so code written against the plane runs unchanged on laptop CI.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
@@ -47,7 +53,7 @@ from repro.detection.batch import (
     match_batch,
 )
 from repro.kernels.estimator_mlp import estimator_mlp
-from repro.kernels.iou_matrix.ops import iou_matrix_batch, resolve_interpret
+from repro.kernels.iou_matrix.ops import iou_matrix_batch, resolve_path
 from repro.launch.mesh import make_fleet_mesh
 
 
@@ -125,6 +131,58 @@ class FleetPlane:
         out = self._shard1d(local, 1, 1)(jnp.asarray(xp))
         return np.asarray(out)[:B]
 
+    def score_detections(self, engine, batch: DetectionsBatch) -> np.ndarray:
+        """Device-resident boxes→estimates scoring with images sharded over
+        the mesh — bit-identical to ``engine.score_device(batch)`` (and so
+        to the composed ``engine.score`` route).
+
+        The per-image feature kernel (the parallel bulk of the pipeline)
+        runs sharded; the standardize + MLP head then runs as ONE
+        replicated dispatch on the cropped device-resident features — the
+        same trace the single-device path executes.  Fusing the head into
+        the shard_map body would put XLA:CPU's gemm at shard-local row
+        counts, which compiles to a different reduction schedule than the
+        global call at some shapes (1-ulp drift) — the split keeps the
+        plane's bit-exactness contract without a host exit between stages.
+        Engines without the fused MLP + box feature extractor, and
+        1-device meshes, fall through to the engine's own device path."""
+        fx = engine.feature_extractor
+        model = engine.reward_model
+        fused = (
+            getattr(model, "fused", False)
+            and hasattr(model, "predict_device")
+            and all(hasattr(fx, a) for a in ("num_classes", "top_k", "image_size"))
+        )
+        if self.n_devices == 1 or not fused:
+            return np.asarray(engine.score_device(batch))
+        B = len(batch)
+        _, total = self.shard_sizes(max(B, 1))
+        padded = batch.pad_images(total)
+        boxes, scores = padded.boxes, padded.scores
+        classes, mask = padded.classes, padded.mask
+        top_k = int(fx.top_k)
+        if padded.max_boxes < top_k:  # the kernel slices a fixed top_k window
+            pad = top_k - padded.max_boxes
+            boxes = np.pad(boxes, ((0, 0), (0, pad), (0, 0)))
+            scores = np.pad(scores, ((0, 0), (0, pad)))
+            classes = np.pad(classes, ((0, 0), (0, pad)), constant_values=-1)
+            mask = np.pad(mask, ((0, 0), (0, pad)))
+        image_size = jnp.float32(fx.image_size)
+        num_classes = int(fx.num_classes)
+
+        def local(b, s, c, m):
+            return _features_kernel(b, s, c, m, image_size, num_classes, top_k)
+
+        f = self._shard1d(local, 4, 1)(
+            jnp.asarray(boxes), jnp.asarray(scores),
+            jnp.asarray(classes), jnp.asarray(mask),
+        )
+        # gather the cropped features onto one device before the head: a
+        # jit over still-sharded inputs auto-partitions the gemm back to
+        # shard-local row counts (the drift the split exists to avoid)
+        f = jax.device_put(f[:B], self.mesh.devices.flat[0])
+        return np.asarray(model.predict_device(f))
+
     # ------------------------------------------------------------ matching
 
     def match(
@@ -133,7 +191,7 @@ class FleetPlane:
         gt: GroundTruthBatch,
         iou_thresholds: Sequence[float] = (0.5,),
         *,
-        interpret: Optional[bool] = None,
+        interpret: Union[None, bool, str] = None,
         tile_b: int = 8,
         tile_n: int = 128,
         tile_m: int = 128,
@@ -149,21 +207,25 @@ class FleetPlane:
                 tile_b=tile_b, tile_n=tile_n, tile_m=tile_m,
             )
         B = len(det)
-        interp = resolve_interpret(interpret)
-        if interp:
+        interp = resolve_path(interpret)
+        if interp == "interpret":
             # mirror match_batch's interpreter-mode tile shrink, computed
             # from the GLOBAL batch — shard-local tiles must not differ
             tile_n = min(tile_n, _pad_dim(det.max_boxes))
             tile_m = min(tile_m, _pad_dim(gt.max_boxes))
             tile_b = min(64, _pad_dim(B))
-        grid_ref = _ceil_to(B, tile_b) // tile_b
         per, total = self.shard_sizes(B)
         det_p, gt_p = det.pad_images(total), gt.pad_images(total)
-        # shard blocks must compile in the single-device call's batch-grid
-        # regime: one tile when the global grid has one, >= 2 tiles otherwise
-        local_rows = _ceil_to(per, tile_b) if grid_ref == 1 else max(
-            _ceil_to(per, tile_b), 2 * tile_b
-        )
+        if interp == "reference":
+            # elementwise vmap IoU: no grid regimes, no extra padding
+            local_rows = per
+        else:
+            grid_ref = _ceil_to(B, tile_b) // tile_b
+            # shard blocks must compile in the single-device call's batch-grid
+            # regime: one tile when the global grid has one, >= 2 tiles otherwise
+            local_rows = _ceil_to(per, tile_b) if grid_ref == 1 else max(
+                _ceil_to(per, tile_b), 2 * tile_b
+            )
         thresholds = jnp.asarray(iou_thresholds, jnp.float32)
 
         def local(d_boxes, d_scores, d_classes, d_mask, g_boxes, g_classes, g_mask):

@@ -1,0 +1,61 @@
+"""Backend-aware kernel path resolution, shared by the serve-time kernels.
+
+Every Pallas wrapper in this package used to expose ``interpret: bool`` —
+compiled lowering vs the Pallas interpreter.  That binary missed the case
+CI actually runs: on CPU the interpreter is frequently *slower* than the
+plain-jnp oracle (``artifacts/BENCH_fc34508.json`` recorded the interpreted
+IoU kernel at 1.75x the jnp reference), so "auto" must be a three-way
+choice:
+
+``"compiled"``
+    The real Pallas lowering — TPU (and GPU triton).
+``"interpret"``
+    The Pallas interpreter: one Python step per grid cell.  Correctness
+    testing of the kernel semantics on hosts without a compiled lowering.
+``"reference"``
+    The pure-jnp oracle under ``jax.jit`` — the fastest *correct* path on
+    CPU, and trivially shard-safe (elementwise/per-row math, no grid-shape
+    compilation regimes).
+
+``resolve_path(None)`` picks ``"reference"`` on CPU and ``"compiled"``
+everywhere else; booleans keep their historical meaning (``True`` →
+interpreter, ``False`` → compiled) so existing callers that thread
+``interpret=`` flags through are unchanged.  The resolution is
+deterministic per process — no runtime autotuning — because the fleet
+plane's bit-identity contract compares results across processes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+
+KERNEL_PATHS = ("compiled", "interpret", "reference")
+
+
+def resolve_path(interpret: Union[None, bool, str] = None) -> str:
+    """Resolve an ``interpret=`` argument to one of :data:`KERNEL_PATHS`.
+
+    ``None`` → ``"reference"`` on CPU, ``"compiled"`` on TPU/GPU;
+    ``True``/``False`` → ``"interpret"``/``"compiled"``; a path string
+    passes through (validated).
+    """
+    if interpret is None:
+        return "reference" if jax.default_backend() == "cpu" else "compiled"
+    if isinstance(interpret, str):
+        if interpret not in KERNEL_PATHS:
+            raise ValueError(
+                f"unknown kernel path {interpret!r}; use one of {KERNEL_PATHS}"
+            )
+        return interpret
+    return "interpret" if interpret else "compiled"
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """The legacy two-way resolution for callers that only choose between
+    the Pallas lowerings: ``None`` → interpreter exactly where no compiled
+    lowering exists (CPU).  Kept for the video tracker and forced-mode
+    benchmarks; new code should prefer :func:`resolve_path`."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)

@@ -1,14 +1,26 @@
 """jit'd wrapper: pads (B, F, H) to MXU-aligned multiples and calls the
 fused kernel; also adapts a trained ``RewardEstimator`` (128, 1)-hidden
-param dict when its shape matches the 2-layer form."""
+param dict when its shape matches the 2-layer form.
+
+``interpret=None`` resolves through ``repro.kernels.dispatch``: the plain
+jnp forward on CPU (same math as ``estimator_mlp_ref``, no padding — the
+fastest correct path, and the one the fused score pipeline inlines so the
+composed and fused serve paths stay bit-identical), compiled Pallas on
+TPU/GPU.  Booleans force the interpreter/compiled lowerings as before.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_path
 from repro.kernels.estimator_mlp.kernel import estimator_mlp_pallas
+from repro.kernels.estimator_mlp.ref import estimator_mlp_ref
+
+_mlp_ref_jit = jax.jit(estimator_mlp_ref)
 
 
 def _pad_to(x, n, axis):
@@ -21,18 +33,8 @@ def _pad_to(x, n, axis):
 
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
-def estimator_mlp(
-    x: jnp.ndarray,  # (B, F)
-    w1: jnp.ndarray,  # (F, H)
-    b1: jnp.ndarray,  # (H,)
-    w2: jnp.ndarray,  # (H,)
-    b2: jnp.ndarray,  # ()
-    tile_b: int = 128,
-    interpret: bool = True,
-) -> jnp.ndarray:
+def _estimator_mlp_pallas(x, w1, b1, w2, b2, tile_b, interpret):
     B, F = x.shape
-    if B == 0:  # degenerate batch: the padded grid would be empty
-        return jnp.zeros((0,), jnp.float32)
     H = w1.shape[1]
     Bp = -(-B // tile_b) * tile_b
     Fp = -(-F // 128) * 128
@@ -44,3 +46,20 @@ def estimator_mlp(
     b2_p = jnp.zeros((1, 128), jnp.float32).at[0, 0].set(b2.astype(jnp.float32))
     out = estimator_mlp_pallas(x_p, w1_p, b1_p, w2_p, b2_p, tile_b, interpret)
     return out[:B, 0]
+
+
+def estimator_mlp(
+    x: jnp.ndarray,  # (B, F)
+    w1: jnp.ndarray,  # (F, H)
+    b1: jnp.ndarray,  # (H,)
+    w2: jnp.ndarray,  # (H,)
+    b2: jnp.ndarray,  # ()
+    tile_b: int = 128,
+    interpret: Union[None, bool, str] = None,
+) -> jnp.ndarray:
+    if x.shape[0] == 0:  # degenerate batch: the padded grid would be empty
+        return jnp.zeros((0,), jnp.float32)
+    path = resolve_path(interpret)
+    if path == "reference":
+        return _mlp_ref_jit(x, w1, b1, w2, b2)
+    return _estimator_mlp_pallas(x, w1, b1, w2, b2, tile_b, path == "interpret")

@@ -1,35 +1,58 @@
 """jit'd wrappers: pad to tile multiples, transpose to the lane-aligned
 ``(..., 4, N)`` layout, call the Pallas kernel, crop.
 
-``interpret=None`` (the default) resolves to the backend: compiled Pallas on
-TPU/GPU, interpreter mode only where no compiled lowering exists (the CPU
-test/CI environments).  Passing an explicit bool forces either path — the
-benchmarks thread it through to compare the two.
+``interpret=None`` (the default) resolves through
+:func:`repro.kernels.dispatch.resolve_path`: the jnp reference on CPU
+(where the Pallas interpreter measured *slower* than the oracle — the
+BENCH_fc34508 regression), compiled Pallas on TPU/GPU.  Booleans force the
+interpreter/compiled lowerings as before; the string ``"reference"``
+forces the oracle.
+
+Tile sizes default per path (``None``): the compiled lowering keeps the
+MXU-friendly 256-lane tiles; interpreter mode shrinks tiles to the padded
+problem so small inputs stop paying for 256x256 zero-padding (the
+tile-size sweep behind the defaults lives in ``bench_iou``).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_interpret, resolve_path
 from repro.kernels.iou_matrix.kernel import iou_matrix_batch_pallas, iou_matrix_pallas
+from repro.kernels.iou_matrix.ref import iou_matrix_batch_ref, iou_matrix_ref
+
+__all__ = [
+    "iou_matrix",
+    "iou_matrix_batch",
+    "resolve_interpret",
+    "resolve_path",
+]
+
+_iou_ref_jit = jax.jit(iou_matrix_ref)
+_iou_batch_ref_jit = jax.jit(iou_matrix_batch_ref)
 
 
-def resolve_interpret(interpret: Optional[bool]) -> bool:
-    """None -> auto: interpret only when the backend has no compiled Pallas
-    lowering (CPU).  TPU (and GPU triton) run the compiled kernel."""
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return bool(interpret)
+def _ceil_to(n: int, multiple: int) -> int:
+    return -(-max(n, 1) // multiple) * multiple
+
+
+def _default_tile(n: int, compiled_tile: int, path: str) -> int:
+    """Interpreter tiles shrink to the 128-padded problem (fewer wasted
+    lanes, same few grid steps); the compiled lowering keeps full tiles."""
+    if path == "interpret":
+        return min(compiled_tile, _ceil_to(n, 128))
+    return compiled_tile
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "tile_m", "interpret"))
 def _iou_matrix(a, b, tile_n, tile_m, interpret):
     N, M = a.shape[0], b.shape[0]
-    Np = -(-max(N, 1) // tile_n) * tile_n
-    Mp = -(-max(M, 1) // tile_m) * tile_m
+    Np = _ceil_to(N, tile_n)
+    Mp = _ceil_to(M, tile_m)
     # pad with degenerate boxes (zero area -> IoU 0)
     a_p = jnp.zeros((Np, 4), a.dtype).at[:N].set(a)
     b_p = jnp.zeros((Mp, 4), b.dtype).at[:M].set(b)
@@ -40,11 +63,16 @@ def _iou_matrix(a, b, tile_n, tile_m, interpret):
 def iou_matrix(
     a: jnp.ndarray,  # (N, 4)
     b: jnp.ndarray,  # (M, 4)
-    tile_n: int = 256,
-    tile_m: int = 256,
-    interpret: Optional[bool] = None,
+    tile_n: Optional[int] = None,
+    tile_m: Optional[int] = None,
+    interpret: Union[None, bool, str] = None,
 ) -> jnp.ndarray:
-    return _iou_matrix(a, b, tile_n, tile_m, resolve_interpret(interpret))
+    path = resolve_path(interpret)
+    if path == "reference":
+        return _iou_ref_jit(a, b)
+    tile_n = _default_tile(a.shape[0], 256, path) if tile_n is None else tile_n
+    tile_m = _default_tile(b.shape[0], 256, path) if tile_m is None else tile_m
+    return _iou_matrix(a, b, tile_n, tile_m, path == "interpret")
 
 
 @functools.partial(
@@ -52,9 +80,9 @@ def iou_matrix(
 )
 def _iou_matrix_batch(a, b, tile_b, tile_n, tile_m, interpret):
     B, K, M = a.shape[0], a.shape[1], b.shape[1]
-    Bp = -(-max(B, 1) // tile_b) * tile_b
-    Kp = -(-max(K, 1) // tile_n) * tile_n
-    Mp = -(-max(M, 1) // tile_m) * tile_m
+    Bp = _ceil_to(B, tile_b)
+    Kp = _ceil_to(K, tile_n)
+    Mp = _ceil_to(M, tile_m)
     a_p = jnp.zeros((Bp, Kp, 4), a.dtype).at[:B, :K].set(a)
     b_p = jnp.zeros((Bp, Mp, 4), b.dtype).at[:B, :M].set(b)
     out = iou_matrix_batch_pallas(
@@ -70,8 +98,11 @@ def iou_matrix_batch(
     tile_b: int = 8,
     tile_n: int = 128,
     tile_m: int = 128,
-    interpret: Optional[bool] = None,
+    interpret: Union[None, bool, str] = None,
 ) -> jnp.ndarray:
     """Per-image pairwise IoU, image i matched only against its own row:
     ``out[i] = iou(a[i], b[i])`` with shape (B, K, M)."""
-    return _iou_matrix_batch(a, b, tile_b, tile_n, tile_m, resolve_interpret(interpret))
+    path = resolve_path(interpret)
+    if path == "reference":
+        return _iou_batch_ref_jit(a, b)
+    return _iou_matrix_batch(a, b, tile_b, tile_n, tile_m, path == "interpret")

@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the IoU kernel."""
+"""Pure-jnp oracles for the IoU kernels (also the serve-time "reference"
+dispatch path on CPU — see ``repro.kernels.dispatch``)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.detection.boxes import box_iou
@@ -9,3 +11,10 @@ from repro.detection.boxes import box_iou
 def iou_matrix_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """a: (N, 4), b: (M, 4) -> (N, M)."""
     return box_iou(a, b)
+
+
+def iou_matrix_batch_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: (B, K, 4), b: (B, M, 4) -> (B, K, M); image i only against its
+    own row.  Elementwise per pair, so sharding the batch axis is trivially
+    bit-identical (no grid-shape compilation regimes)."""
+    return jax.vmap(box_iou)(a, b)

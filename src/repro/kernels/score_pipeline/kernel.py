@@ -1,0 +1,129 @@
+"""Pallas kernel: the fused serve-time score pipeline.
+
+One kernel per batch tile takes the *gathered* top-k detection arrays
+(selection by confidence is a data-dependent ``argsort`` and stays outside,
+see ``ops.py``) and produces the reward estimate with every intermediate —
+per-box features, global stats, standardized feature row, hidden
+activation — living only in VMEM:
+
+    per-box [s, cx, cy, w, h, area, aspect, onehot(class)]
+    global  [n/K, mean, max, entropy, class histogram]
+    x   = (concat - mu) / sigma
+    out = sigmoid(gelu(x @ W1 + b1) @ W2 + b2)
+
+Layouts mirror ``estimator_mlp``: W2 is padded to (H, 128) so the MXU sees
+a 128-lane output, column 0 carries the scalar; F and H are padded to 128
+multiples by ops.py, with ``mu`` padded with zeros and ``sigma`` with ones
+so the padded feature lanes standardize to exact zeros (and W1's padded
+rows are zero, so they never contribute).
+
+The box axis runs at the raw ``top_k`` (25) — on TPU the feature stage is
+VPU elementwise work where sublane padding is implicit; the two matmuls
+dominate and are fully 128-aligned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(num_classes: int, top_k: int, f_dim: int):
+    def kernel(s_ref, bx_ref, cls_ref, m_ref, w1_ref, b1_ref, w2_ref,
+               b2_ref, mu_ref, sig_ref, out_ref):
+        s = s_ref[...]  # (TB, K) gathered masked scores
+        m = m_ref[...]  # (TB, K) gathered validity as float
+        cls = cls_ref[...]  # (TB, K) gathered clipped classes
+        bx = bx_ref[...]  # (TB, K, 4) gathered normalized boxes
+        TB, K = s.shape
+
+        cx = (bx[..., 0] + bx[..., 2]) / 2
+        cy = (bx[..., 1] + bx[..., 3]) / 2
+        w = jnp.maximum(bx[..., 2] - bx[..., 0], 0.0)
+        h = jnp.maximum(bx[..., 3] - bx[..., 1], 0.0)
+        area = w * h
+        aspect = jnp.clip(w / jnp.maximum(h, 1e-6), 0.0, 10.0) / 10.0
+        # one_hot via broadcasted iota (TPU needs >= 2-D iota)
+        cid = lax.broadcasted_iota(jnp.int32, (TB, K, num_classes), 2)
+        onehot = jnp.where(
+            cid == cls[..., None], 1.0, 0.0
+        ).astype(jnp.float32) * m[..., None]
+        feats = jnp.concatenate(
+            [
+                jnp.stack(
+                    [s, cx * m, cy * m, w * m, h * m, area * m, aspect * m],
+                    axis=-1,
+                ),
+                onehot,
+            ],
+            axis=-1,
+        )  # (TB, K, 7 + C)
+
+        n = m.sum(axis=1)
+        nonempty = n > 0
+        safe_n = jnp.maximum(n, 1.0)
+        hist = jnp.where(
+            nonempty[:, None], onehot.sum(axis=1) / safe_n[:, None], 0.0
+        )
+        s_sum = s.sum(axis=1)
+        p = s / jnp.maximum(s_sum, 1e-9)[:, None]
+        entropy = -(p * jnp.log(jnp.maximum(p, 1e-12))).sum(axis=1)
+        s_max = jnp.max(jnp.where(m > 0, s, -jnp.inf), axis=1)
+        glob = jnp.stack(
+            [n / top_k, s_sum / safe_n, jnp.where(nonempty, s_max, 0.0), entropy],
+            axis=-1,
+        )
+        glob = jnp.where(nonempty[:, None], glob, 0.0)
+        x = jnp.concatenate([feats.reshape(TB, -1), glob, hist], axis=1)
+
+        f_pad = mu_ref.shape[1] - f_dim
+        if f_pad:
+            x = jnp.pad(x, ((0, 0), (0, f_pad)))
+        x = (x - mu_ref[...]) / sig_ref[...]
+        hid = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+        hid = jax.nn.gelu(hid + b1_ref[...])
+        o = jnp.dot(hid, w2_ref[...], preferred_element_type=jnp.float32)
+        out_ref[...] = jax.nn.sigmoid(o + b2_ref[...])
+
+    return kernel
+
+
+def score_pipeline_pallas(
+    s: jnp.ndarray,  # (B, K) gathered masked scores, B % tile_b == 0
+    bx: jnp.ndarray,  # (B, K, 4) gathered normalized boxes
+    cls: jnp.ndarray,  # (B, K) int32 gathered clipped classes
+    m: jnp.ndarray,  # (B, K) float32 gathered validity
+    w1: jnp.ndarray,  # (Fp, Hp)
+    b1: jnp.ndarray,  # (1, Hp)
+    w2: jnp.ndarray,  # (Hp, 128)  col 0 = real weights
+    b2: jnp.ndarray,  # (1, 128)
+    mu: jnp.ndarray,  # (1, Fp)  zero-padded
+    sigma: jnp.ndarray,  # (1, Fp)  one-padded
+    num_classes: int,
+    f_dim: int,  # unpadded feature dim top_k*(7+C) + 4 + C
+    tile_b: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, K = s.shape
+    Fp, Hp = w1.shape
+    grid = (B // tile_b,)
+    return pl.pallas_call(
+        _make_kernel(num_classes, K, f_dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, K, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((Fp, Hp), lambda i: (0, 0)),
+            pl.BlockSpec((1, Hp), lambda i: (0, 0)),
+            pl.BlockSpec((Hp, 128), lambda i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),
+            pl.BlockSpec((1, Fp), lambda i: (0, 0)),
+            pl.BlockSpec((1, Fp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 128), jnp.float32),
+        interpret=interpret,
+    )(s, bx, cls, m, w1, b1, w2, b2, mu, sigma)

@@ -1,0 +1,198 @@
+"""One device-resident dispatch from padded ``DetectionsBatch`` blocks to
+reward estimates — the serve-time hot path with no host materialization
+between stages.
+
+The composed path exits to numpy twice per block (features →
+``np.asarray``, scores → ``np.asarray``) and re-enters jit three times.
+Here the whole pipeline — top-k feature extraction, standardize, estimator
+MLP — runs as ONE jitted dispatch:
+
+``"lax"``
+    The portable composition: ``score_pipeline_ref`` under ``jax.jit``.
+    Because ``estimator_mlp`` resolves to the same plain-jnp MLP math on
+    CPU, this path is **bit-identical** to the composed
+    ``extract_features_batch → MLPRewardModel.predict`` route (the
+    property tests pin this down), while fusing away the host round-trips.
+``"pallas"`` / ``"pallas_interpret"``
+    The fused Pallas kernel (``kernel.py``): confidence top-k gather stays
+    outside (data-dependent ``argsort``), everything downstream — per-box
+    features, global stats, standardize, both MLP layers — is one kernel
+    with intermediates resident in VMEM.
+
+``path=None`` auto-resolves: ``"pallas"`` where a compiled lowering exists
+(TPU/GPU), ``"lax"`` on CPU (the interpreter would be slower than the jit
+— the same reasoning as ``repro.kernels.dispatch.resolve_path``).
+
+Buffer donation: on accelerator backends the lax path donates the four
+detection arrays (they are consumed by the dispatch — pending blocks are
+dead after the policy boundary), letting XLA reuse their buffers for the
+feature stage.  CPU ignores donation, so the donating jit is only built
+off-CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import feature_dim
+from repro.detection.batch import DetectionsBatch
+from repro.kernels.score_pipeline.kernel import score_pipeline_pallas
+from repro.kernels.score_pipeline.ref import score_pipeline_ref
+
+PIPELINE_PATHS = ("lax", "pallas", "pallas_interpret")
+
+
+def resolve_pipeline_path(path: Optional[str] = None) -> str:
+    """``None`` → ``"pallas"`` on TPU/GPU, ``"lax"`` on CPU."""
+    if path is None:
+        return "lax" if jax.default_backend() == "cpu" else "pallas"
+    if path not in PIPELINE_PATHS:
+        raise ValueError(
+            f"unknown score-pipeline path {path!r}; use one of {PIPELINE_PATHS}"
+        )
+    return path
+
+
+def pipeline_params(model) -> Dict[str, jnp.ndarray]:
+    """The device param bundle ``score_pipeline`` consumes, from a *fused*
+    ``MLPRewardModel`` (one hidden layer + sigmoid head).  This is the
+    uncached builder; ``MLPRewardModel.pipeline_params`` wraps it with an
+    identity-keyed cache (safe because weight updates install fresh
+    arrays) so the serve hot path skips the eager slicing below."""
+    if not getattr(model, "fused", False):
+        raise ValueError(
+            "score_pipeline needs a fused reward model (single hidden "
+            "layer + sigmoid head); score through the composed path instead"
+        )
+    est = model.estimator
+    p = est.params
+    w1 = p["layer0"]["w"]
+    if model.config.standardize:
+        mu = jnp.asarray(est._mu, jnp.float32)
+        sigma = jnp.asarray(est._sigma, jnp.float32)
+    else:
+        # (x - 0) / 1 is exact in IEEE float32: the no-standardize engine
+        # keeps bit-identity through the same fused trace
+        mu = jnp.zeros((w1.shape[0],), jnp.float32)
+        sigma = jnp.ones((w1.shape[0],), jnp.float32)
+    return {
+        "w1": w1,
+        "b1": p["layer0"]["b"],
+        "w2": p["layer1"]["w"][:, 0],
+        "b2": p["layer1"]["b"][0],
+        "mu": mu,
+        "sigma": sigma,
+    }
+
+
+_LAX_JITS: Dict[bool, "jax.stages.Wrapped"] = {}
+
+
+def _lax_jit(donate: bool):
+    if donate not in _LAX_JITS:
+        kwargs = dict(static_argnames=("num_classes", "top_k"))
+        if donate:
+            kwargs["donate_argnums"] = (0, 1, 2, 3)
+        _LAX_JITS[donate] = jax.jit(score_pipeline_ref, **kwargs)
+    return _LAX_JITS[donate]
+
+
+def _ceil_to(n: int, multiple: int) -> int:
+    return -(-max(n, 1) // multiple) * multiple
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_classes", "top_k", "tile_b", "interpret")
+)
+def _score_pipeline_pallas(
+    boxes, scores, classes, mask, w1, b1, w2, b2, mu, sigma,
+    image_size, num_classes, top_k, tile_b, interpret,
+):
+    K = scores.shape[1]
+    if K < top_k:  # the kernel slices a fixed top_k window
+        pad = top_k - K
+        boxes = jnp.pad(boxes, ((0, 0), (0, pad), (0, 0)))
+        scores = jnp.pad(scores, ((0, 0), (0, pad)))
+        classes = jnp.pad(classes, ((0, 0), (0, pad)), constant_values=-1)
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    # confidence top-k: data-dependent gather, outside the kernel — same
+    # selection rule as box_feature_stack (stable, invalid slots sink)
+    keys = jnp.where(mask, scores, -jnp.inf)
+    order = jnp.argsort(-keys, axis=1, stable=True)[:, :top_k]
+    m = jnp.take_along_axis(mask, order, axis=1).astype(jnp.float32)
+    s = jnp.take_along_axis(scores, order, axis=1) * m
+    cls = jnp.clip(jnp.take_along_axis(classes, order, axis=1), 0, num_classes - 1)
+    bx = jnp.take_along_axis(boxes, order[:, :, None], axis=1) / image_size
+
+    B = s.shape[0]
+    F, H = w1.shape
+    Bp, Fp, Hp = _ceil_to(B, tile_b), _ceil_to(F, 128), _ceil_to(H, 128)
+    s_p = jnp.zeros((Bp, top_k), jnp.float32).at[:B].set(s)
+    bx_p = jnp.zeros((Bp, top_k, 4), jnp.float32).at[:B].set(bx)
+    cls_p = jnp.zeros((Bp, top_k), jnp.int32).at[:B].set(cls)
+    m_p = jnp.zeros((Bp, top_k), jnp.float32).at[:B].set(m)
+    w1_p = jnp.zeros((Fp, Hp), jnp.float32).at[:F, :H].set(w1)
+    b1_p = jnp.zeros((1, Hp), jnp.float32).at[0, :H].set(b1)
+    w2_p = jnp.zeros((Hp, 128), jnp.float32).at[:H, 0].set(w2)
+    b2_p = jnp.zeros((1, 128), jnp.float32).at[0, 0].set(b2)
+    mu_p = jnp.zeros((1, Fp), jnp.float32).at[0, :F].set(mu)
+    sig_p = jnp.ones((1, Fp), jnp.float32).at[0, :F].set(sigma)
+    out = score_pipeline_pallas(
+        s_p, bx_p, cls_p, m_p, w1_p, b1_p, w2_p, b2_p, mu_p, sig_p,
+        num_classes=num_classes, f_dim=F, tile_b=tile_b, interpret=interpret,
+    )
+    return out[:B, 0]
+
+
+def score_pipeline(
+    batch: Union[DetectionsBatch, Tuple],
+    params: Dict[str, jnp.ndarray],
+    *,
+    num_classes: int,
+    top_k: int = 25,
+    image_size: float = 1.0,
+    path: Optional[str] = None,
+    tile_b: int = 128,
+) -> jnp.ndarray:
+    """(B,) device-resident reward estimates for a padded detection block.
+
+    ``batch`` is a :class:`DetectionsBatch` or a ``(boxes, scores,
+    classes, mask)`` tuple of (possibly already device-resident) arrays;
+    ``params`` comes from :func:`pipeline_params`.  The result stays a
+    ``jnp`` array — callers convert once at the policy boundary.
+    """
+    if isinstance(batch, DetectionsBatch):
+        arrays = (batch.boxes, batch.scores, batch.classes, batch.mask)
+    else:
+        arrays = tuple(batch)
+    # host arrays go straight into the jit (it converts on dispatch) — an
+    # eager jnp.asarray here would cost four extra op dispatches per block
+    boxes, scores, classes, mask = arrays
+    F = int(params["w1"].shape[0])
+    expect = feature_dim(int(num_classes), int(top_k))
+    if F != expect:
+        raise ValueError(
+            f"reward model expects {F} features but the detection extractor "
+            f"produces {expect} (num_classes={num_classes}, top_k={top_k})"
+        )
+    if scores.shape[0] == 0:
+        return jnp.zeros((0,), jnp.float32)
+    resolved = resolve_pipeline_path(path)
+    p = params
+    if resolved == "lax":
+        fn = _lax_jit(donate=jax.default_backend() != "cpu")
+        return fn(
+            boxes, scores, classes, mask,
+            p["w1"], p["b1"], p["w2"], p["b2"], p["mu"], p["sigma"],
+            np.float32(image_size), int(num_classes), int(top_k),
+        )
+    return _score_pipeline_pallas(
+        boxes, scores, classes, mask,
+        p["w1"], p["b1"], p["w2"], p["b2"], p["mu"], p["sigma"],
+        np.float32(image_size), int(num_classes), int(top_k),
+        int(tile_b), resolved == "pallas_interpret",
+    )

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused serve-time score pipeline.
+
+Exactly the composed serve path — top-k box features, standardize, 2-layer
+sigmoid MLP — as one unjitted traceable function.  ``ops.py`` jits it for
+the portable ``lax`` path; the tests compare the Pallas kernel against it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.features import box_feature_stack
+from repro.kernels.estimator_mlp.ref import estimator_mlp_ref
+
+
+def score_pipeline_ref(
+    boxes,  # (B, K, 4) padded detector boxes
+    scores,  # (B, K)
+    classes,  # (B, K) int32, padded slots -1
+    mask,  # (B, K) bool
+    w1,  # (F, H)
+    b1,  # (H,)
+    w2,  # (H,)
+    b2,  # ()
+    mu,  # (F,) standardize mean (zeros when standardize is off)
+    sigma,  # (F,) standardize scale (ones when standardize is off)
+    image_size,
+    num_classes: int,
+    top_k: int,
+) -> jnp.ndarray:
+    """(B,) reward estimates straight from padded detection arrays."""
+    K = scores.shape[1]
+    if K < top_k:  # the feature stack slices a fixed top_k window
+        pad = top_k - K
+        boxes = jnp.pad(boxes, ((0, 0), (0, pad), (0, 0)))
+        scores = jnp.pad(scores, ((0, 0), (0, pad)))
+        classes = jnp.pad(classes, ((0, 0), (0, pad)), constant_values=-1)
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    f = box_feature_stack(
+        boxes, scores, classes, mask, image_size, num_classes, top_k
+    )
+    x = (f - mu) / sigma
+    return estimator_mlp_ref(x, w1, b1, w2, b2)

@@ -25,6 +25,10 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+#: initial pending-buffer capacity (rows); grows geometrically — the hot
+#: loop never allocates per frame after warmup
+_MIN_BUFFER_ROWS = 64
+
 from repro.api.engine import OffloadEngine
 from repro.api.policies import make_policy, policy_context_params
 
@@ -209,7 +213,11 @@ class OffloadSession:
         self.policy = make_policy(
             engine.policy_name, engine.calibration_scores, self._ratio, **kwargs
         )
-        self._pending: List[np.ndarray] = []  # pending (n_i, F) feature blocks
+        # pending features live in one preallocated (capacity, F) buffer —
+        # rows [0, _pending_rows) are queued arrivals.  The old per-frame
+        # list of (1, F) blocks + np.concatenate on every drain was the
+        # prime suspect in the dispatcher fps regression.
+        self._buf: Optional[np.ndarray] = None
         self._pending_rows = 0
         self._next_step = 0                   # arrival index of next submit
         self._window = deque(maxlen=max(int(telemetry_window), 1))
@@ -268,7 +276,26 @@ class OffloadSession:
         block — no per-item conversion or row-at-a-time Python.  Scoring
         drains in micro-batch chunks and decisions stay sequential; with
         ``flush=False`` a trailing partial micro-batch stays buffered for
-        the next call."""
+        the next call.
+
+        With ``flush=True`` and nothing already pending, the batch never
+        touches the host feature queue at all: it goes through
+        ``engine.score_device`` — for a padded ``DetectionsBatch`` under
+        the detection extractor + fused MLP that is the one-dispatch
+        boxes→estimates pipeline — and converts once at the policy
+        boundary.  Decisions are identical to the buffered route (both
+        score the same rows as one batch, in arrival order)."""
+        if flush and self._pending_rows == 0 and (
+            features is None or np.ndim(features) == 2
+        ):
+            est = np.asarray(
+                self.engine.score_device(weak_outputs, features=features),
+                np.float64,
+            ).ravel()
+            if est.size == 0:
+                return []
+            self._next_step += est.size
+            return self._decide(est)
         x = np.asarray(self.engine.features(weak_outputs, features=features), np.float32)
         self._enqueue(x)
         out: List[StepDecision] = []
@@ -282,10 +309,22 @@ class OffloadSession:
     def _enqueue(self, block: np.ndarray) -> None:
         if block.ndim != 2:
             raise ValueError(f"feature blocks must be 2-D, got {block.shape}")
-        if block.shape[0]:
-            self._pending.append(block)
-            self._pending_rows += block.shape[0]
-        self._next_step += block.shape[0]
+        rows = block.shape[0]
+        if rows:
+            need = self._pending_rows + rows
+            if self._buf is None or self._buf.shape[1] != block.shape[1]:
+                cap = max(_MIN_BUFFER_ROWS, self.micro_batch, need)
+                self._buf = np.empty((cap, block.shape[1]), np.float32)
+            elif need > self._buf.shape[0]:
+                grown = np.empty(
+                    (max(need, 2 * self._buf.shape[0]), block.shape[1]),
+                    np.float32,
+                )
+                grown[: self._pending_rows] = self._buf[: self._pending_rows]
+                self._buf = grown
+            self._buf[self._pending_rows : need] = block
+            self._pending_rows = need
+        self._next_step += rows
 
     def flush(self) -> List[StepDecision]:
         """Score everything pending (one fused-kernel call) and decide each
@@ -295,13 +334,19 @@ class OffloadSession:
     def _drain(self, rows: int) -> List[StepDecision]:
         """Score the first ``rows`` pending frames as one batch and decide
         them in arrival order."""
-        if rows <= 0 or not self._pending:
+        if rows <= 0 or not self._pending_rows:
             return []
-        x = self._pending[0] if len(self._pending) == 1 else np.concatenate(self._pending)
-        head, tail = x[:rows], x[rows:]
-        self._pending = [tail] if tail.shape[0] else []
-        self._pending_rows = tail.shape[0]
-        estimates = np.asarray(self.engine.score(features=head), np.float64).ravel()
+        rows = min(rows, self._pending_rows)
+        head = self._buf[:rows]
+        # device scoring; one host conversion at the policy boundary (the
+        # estimates are materialized before the buffer is compacted)
+        estimates = np.asarray(
+            self.engine.score_device(features=head), np.float64
+        ).ravel()
+        rem = self._pending_rows - rows
+        if rem:
+            self._buf[:rem] = self._buf[rows : self._pending_rows].copy()
+        self._pending_rows = rem
         return self._decide(estimates)
 
     def submit_scored(self, estimates: np.ndarray) -> List[StepDecision]:

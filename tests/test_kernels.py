@@ -16,9 +16,12 @@ def boxes(rng, n, dtype):
 
 @pytest.mark.parametrize("n,m", [(1, 1), (7, 300), (256, 256), (511, 130), (1024, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_iou_matrix_sweep(n, m, dtype, rng):
+@pytest.mark.parametrize("interpret", [True, None])
+def test_iou_matrix_sweep(n, m, dtype, interpret, rng):
+    # interpret=True pins the Pallas kernel; None exercises the backend
+    # auto-dispatch (the jitted jnp reference on CPU hosts)
     a, b = boxes(rng, n, dtype), boxes(rng, m, dtype)
-    got = iou_matrix(a, b)
+    got = iou_matrix(a, b, interpret=interpret)
     want = iou_matrix_ref(a, b)
     tol = 1e-6 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(
@@ -29,21 +32,22 @@ def test_iou_matrix_sweep(n, m, dtype, rng):
 @pytest.mark.parametrize("tile", [128, 256])
 def test_iou_matrix_tiles(tile, rng):
     a, b = boxes(rng, 300, jnp.float32), boxes(rng, 200, jnp.float32)
-    got = iou_matrix(a, b, tile_n=tile, tile_m=tile)
+    got = iou_matrix(a, b, tile_n=tile, tile_m=tile, interpret=True)
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(iou_matrix_ref(a, b)), atol=1e-6
     )
 
 
 @pytest.mark.parametrize("B,F,H", [(1, 10, 8), (37, 395, 96), (128, 512, 128), (300, 100, 64)])
-def test_estimator_mlp_sweep(B, F, H, rng):
+@pytest.mark.parametrize("interpret", [True, None])
+def test_estimator_mlp_sweep(B, F, H, interpret, rng):
     x = jnp.asarray(rng.normal(0, 1, (B, F)), jnp.float32)
     w1 = jnp.asarray(rng.normal(0, 0.1, (F, H)), jnp.float32)
     b1 = jnp.asarray(rng.normal(0, 0.1, H), jnp.float32)
     w2 = jnp.asarray(rng.normal(0, 0.1, H), jnp.float32)
     b2 = jnp.asarray(0.05, jnp.float32)
     np.testing.assert_allclose(
-        np.asarray(estimator_mlp(x, w1, b1, w2, b2)),
+        np.asarray(estimator_mlp(x, w1, b1, w2, b2, interpret=interpret)),
         np.asarray(estimator_mlp_ref(x, w1, b1, w2, b2)),
         atol=1e-5,
     )

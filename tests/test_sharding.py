@@ -243,6 +243,36 @@ _FLEET_PLANE_PROPERTY = textwrap.dedent(
         out = plane.score(eng, x[:B])
         assert np.array_equal(ref, out), B
 
+    # fused boxes→estimates pipeline, sharded: score_detections must be
+    # bit-identical to the single-device fused dispatch AND the composed
+    # features→score route, over ragged shard splits
+    from repro.api import DetectionBoxFeatures
+
+    dets_cal, _ = synth(120, seed=3)
+    dcal = DetectionsBatch.from_list(dets_cal)
+    fx = DetectionBoxFeatures(num_classes=8, top_k=25, image_size=64.0)
+    eng2 = OffloadEngine(
+        feature_extractor=fx,
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(16,), epochs=2, batch_size=64)
+        ),
+    )
+    eng2.fit(
+        features=extract_features_batch(dcal, 8, 25, 64.0),
+        rewards=np.random.default_rng(1).uniform(0, 1, 120),
+    )
+    assert eng2.reward_model.fused
+    # 7/13 land in small shard blocks, 150/250 in the large-block gemm
+    # regime (250 is also ragged: 63*3+61) — the gather-before-head split
+    # must hold bit-identity in all of them
+    for B in (7, 13, 150, 250):
+        dets, _ = synth(B, seed=100 + B)
+        db = DetectionsBatch.from_list(dets)
+        ref = np.asarray(eng2.score_device(db))
+        assert np.array_equal(ref, eng2.score(db)), B
+        out = plane.score_detections(eng2, db)
+        assert np.array_equal(ref, out), B
+
     print("FLEET-PLANE-BITIDENT-OK")
     """
 )
