@@ -13,7 +13,11 @@ Rules of the comparison:
   sub-noise timings (and the derived-only rows that report ``0.0``)
   whipsaw on shared CI hosts and would make the gate cry wolf;
 - fewer than two artifacts is a clean exit 0: the first run of a fresh
-  checkout (or a wiped artifacts dir) has nothing to compare against.
+  checkout (or a wiped artifacts dir) has nothing to compare against;
+- an unreadable/malformed artifact, or two artifacts sharing no bench
+  names at all, is also a clean exit 0 with a one-line explanation — the
+  gate reports *perf* regressions, never masquerades a broken artifact
+  trail as one.
 
 Usage::
 
@@ -31,6 +35,10 @@ from typing import Dict, List, Optional, Tuple
 ART = os.path.join(os.path.dirname(__file__), "../artifacts")
 
 
+class ArtifactError(Exception):
+    """A BENCH_*.json that cannot be compared (unreadable / malformed)."""
+
+
 def latest_artifacts(art_dir: str, n: int = 2) -> List[str]:
     """The ``n`` most recent BENCH_*.json paths, oldest first."""
     paths = glob.glob(os.path.join(art_dir, "BENCH_*.json"))
@@ -42,16 +50,28 @@ def load_medians(
     path: str,
 ) -> Tuple[str, Dict[str, float], Dict[str, Dict[str, float]]]:
     """(rev, name→median_ms, name→stage→median_ms) for one artifact; the
-    stage map only has entries for benches that emitted a breakdown."""
-    with open(path) as f:
-        payload = json.load(f)
-    benches = payload.get("benches", [])
-    medians = {b["name"]: float(b["median_ms"]) for b in benches}
-    stages = {
-        b["name"]: {k: float(v) for k, v in b["stages"].items()}
-        for b in benches
-        if b.get("stages")
-    }
+    stage map only has entries for benches that emitted a breakdown.
+    Raises :class:`ArtifactError` with a readable message when the file
+    is unreadable, not JSON, or missing the bench fields."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        benches = payload.get("benches", [])
+        medians = {b["name"]: float(b["median_ms"]) for b in benches}
+        stages = {
+            b["name"]: {k: float(v) for k, v in b["stages"].items()}
+            for b in benches
+            if b.get("stages")
+        }
+    except OSError as e:
+        raise ArtifactError(f"cannot read {path!r}: {e}") from e
+    except json.JSONDecodeError as e:
+        raise ArtifactError(f"{path!r} is not valid JSON: {e}") from e
+    except (KeyError, TypeError, ValueError, AttributeError) as e:
+        raise ArtifactError(
+            f"{path!r} is not a BENCH artifact (expected "
+            f'{{"benches": [{{"name", "median_ms", ...}}]}}): {e!r}'
+        ) from e
     return payload.get("rev", os.path.basename(path)), medians, stages
 
 
@@ -125,9 +145,19 @@ def main(argv=None) -> int:
             "need two to compare, nothing to gate"
         )
         return 0
-    (prev_rev, prev, prev_stages), (cur_rev, cur, cur_stages) = (
-        load_medians(p) for p in paths
-    )
+    try:
+        (prev_rev, prev, prev_stages), (cur_rev, cur, cur_stages) = (
+            load_medians(p) for p in paths
+        )
+    except ArtifactError as e:
+        print(f"# skipping perf gate — {e}")
+        return 0
+    if not set(prev) & set(cur):
+        print(
+            f"# {prev_rev} and {cur_rev} share no bench names — "
+            "nothing to gate (smoke/full sets diverged or a run was empty)"
+        )
+        return 0
     regressions, improvements, compared = compare(
         prev, cur, args.threshold, args.min_ms, prev_stages, cur_stages
     )

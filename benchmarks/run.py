@@ -717,6 +717,51 @@ def bench_kernels() -> None:
          "jnp_oracle;pallas_validated_in_tests")
 
 
+def bench_obs_overhead() -> None:
+    """Observability must cost nothing when it is off.  The streaming
+    serve workload runs three ways — ``obs=None`` (the default), a noop
+    handle (every plane constructed but disabled), and a fully enabled
+    ``Obs`` — interleaved best-of-N so host-speed drift cancels.  The
+    disabled handle is asserted within 3% of ``obs=None``; the enabled
+    cost is reported, not gated (it buys metrics + spans + profiling)."""
+    from repro.obs import Obs
+    from repro.runtime import default_edge_fleet, simulate
+
+    eng, x = _smoke_engine(n=512)
+
+    def run(obs):
+        return simulate(
+            eng, features=x, edges=default_edge_fleet(3, seed=0),
+            ratio=0.3, micro_batch=64, seed=0, obs=obs,
+        )
+
+    arms = {
+        "none": lambda: run(None),
+        "noop": lambda: run(Obs.noop()),
+        "enabled": lambda: run(Obs()),
+    }
+    for f in arms.values():
+        f()  # warm every path (jit caches, allocator)
+    best = {k: float("inf") for k in arms}
+    for _ in range(7):
+        for k, f in arms.items():
+            t0 = time.perf_counter()
+            f()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    over_noop = best["noop"] / best["none"] - 1.0
+    over_on = best["enabled"] / best["none"] - 1.0
+    assert over_noop < 0.03, (
+        f"disabled observability costs {over_noop:+.1%} over obs=None "
+        f"(>3%) — a hot path lost its `is None` guard"
+    )
+    emit(
+        f"obs_overhead_b{len(x)}", best["none"] * 1e6 / len(x),
+        f"noop={over_noop:+.1%};enabled={over_on:+.1%}"
+        f";frames_per_s={len(x) / best['none']:.0f}",
+        shape={"frames": len(x), "edges": 3, "reps": 7},
+    )
+
+
 def _git_rev() -> str:
     try:
         return subprocess.run(
@@ -742,6 +787,29 @@ def _write_bench_json(smoke: bool) -> str:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     return path
+
+
+def _write_obs_artifacts() -> List[str]:
+    """One observed run of the congested-fleet scenario per bench sweep:
+    exports ``artifacts/metrics_<rev>.json`` (the full registry, retrace
+    counters included) and ``artifacts/trace_<rev>.json`` (Chrome trace —
+    open in Perfetto) so every CI bench run leaves an inspectable picture
+    of the serve stack, not just medians."""
+    from repro.obs import Obs
+    from repro.runtime import default_congested_fleet, simulate
+
+    eng, x = _smoke_engine(n=256)
+    obs = Obs()
+    simulate(
+        eng, features=x, edges=default_congested_fleet(3, seed=0),
+        ratio=0.3, micro_batch=16, seed=0, obs=obs,
+    )
+    rev = _git_rev()
+    metrics_path = os.path.join(ART, f"metrics_{rev}.json")
+    trace_path = os.path.join(ART, f"trace_{rev}.json")
+    obs.metrics.export_json(metrics_path)
+    obs.tracer.export(trace_path)
+    return [metrics_path, trace_path]
 
 
 def registered_benches(interpret=None):
@@ -772,6 +840,7 @@ def registered_benches(interpret=None):
         ("fleet_scale", bench_fleet_scale),
         ("iou", lambda: bench_iou(interpret=interpret)),
         ("kernels", bench_kernels),
+        ("obs_overhead", bench_obs_overhead),
     ]
     return full, smoke
 
@@ -856,6 +925,8 @@ def main(argv=None) -> None:
         f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
     print(f"# wrote {out}")
     print(f"# wrote {_write_bench_json(args.smoke)}")
+    for p in _write_obs_artifacts():
+        print(f"# wrote {p}")
 
 
 if __name__ == "__main__":

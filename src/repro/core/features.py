@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.detection.batch import DetectionsBatch
 from repro.detection.map_engine import Detections
+from repro.obs.jit_stats import register_jit
 
 
 def feature_dim(num_classes: int, top_k: int = 25) -> int:
@@ -123,9 +124,12 @@ def box_feature_stack(boxes, scores, classes, mask, image_size, num_classes, top
     return jnp.concatenate([feats.reshape(B, -1), glob, hist], axis=1)
 
 
-_features_kernel = functools.partial(
-    jax.jit, static_argnames=("num_classes", "top_k")
-)(box_feature_stack)
+_features_kernel = register_jit(
+    "features.box_feature_stack",
+    functools.partial(
+        jax.jit, static_argnames=("num_classes", "top_k")
+    )(box_feature_stack),
+)
 
 
 def extract_features_batch(

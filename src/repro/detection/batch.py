@@ -40,6 +40,7 @@ from jax import lax
 
 from repro.detection.map_engine import Detections, GroundTruth, ImageEval
 from repro.kernels.iou_matrix.ops import iou_matrix_batch, resolve_path
+from repro.obs.jit_stats import register_jit
 
 
 def _pad_dim(n: int, multiple: int = 8) -> int:
@@ -235,6 +236,9 @@ def _greedy_match(
     return tp, mj
 
 
+register_jit("detection.greedy_match", _greedy_match)
+
+
 @jax.jit
 def _match_inputs(
     d_scores, d_classes, d_mask, g_classes, g_mask, iou
@@ -254,6 +258,9 @@ def _match_inputs(
     keys = jnp.where(d_mask, d_scores, -jnp.inf)
     order = jnp.argsort(-keys, axis=1, stable=True)
     return masked, order
+
+
+register_jit("detection.match_inputs", _match_inputs)
 
 
 def match_batch(

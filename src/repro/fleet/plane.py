@@ -55,6 +55,7 @@ from repro.detection.batch import (
 from repro.kernels.estimator_mlp import estimator_mlp
 from repro.kernels.iou_matrix.ops import iou_matrix_batch, resolve_path
 from repro.launch.mesh import make_fleet_mesh
+from repro.obs.jit_stats import count_call
 
 
 def _ceil_to(n: int, multiple: int) -> int:
@@ -113,6 +114,10 @@ class FleetPlane:
         model = engine.reward_model
         if self.n_devices == 1 or not getattr(model, "fused", False):
             return np.asarray(engine.score(features=x))
+        # the shard_map closure below is rebuilt per call (params close
+        # over fresh arrays), so retraces can't be read off a stable jit
+        # object — count dispatches instead
+        count_call("fleet_plane.score")
         est = model.estimator
         if model.config.standardize:
             x = (x - est._mu) / est._sigma
@@ -155,6 +160,7 @@ class FleetPlane:
         )
         if self.n_devices == 1 or not fused:
             return np.asarray(engine.score_device(batch))
+        count_call("fleet_plane.score_detections")
         B = len(batch)
         _, total = self.shard_sizes(max(B, 1))
         padded = batch.pad_images(total)

@@ -193,6 +193,7 @@ class FleetRuntime:
         on_saturation: str = "degrade",
         arrival_period: float = 1.0,
         seed: int = 0,
+        obs: Optional[Any] = None,
     ):
         if n_streams < 1:
             raise ValueError(f"n_streams must be >= 1, got {n_streams}")
@@ -229,6 +230,16 @@ class FleetRuntime:
                 return default_edge_fleet(
                     edges_per_shard, seed=seed + 1000 * s, prefix=f"s{s}_edge"
                 )
+        # observability: the fleet stamps spans in simulated time — tick
+        # spans on track 0, one session track per shard (1+s), edge tracks
+        # blocked out per shard from 100 in steps of 100
+        self.obs = obs
+        self._profiler = obs.profiler if obs is not None else None
+        self._tracer = obs.tracer if obs is not None else None
+        if obs is not None:
+            obs.bind_clock(self.clock)
+            if obs.tracer is not None:
+                obs.tracer.thread_name(0, "fleet")
         self.shards: List[_Shard] = []
         for s in range(self.n_shards):
             sl = slice(s * per, min((s + 1) * per, self.n_streams))
@@ -237,20 +248,20 @@ class FleetRuntime:
                 ratio=self.ratio,
                 policy_kwargs={"gain": gain, "budget": self.budget, "shard": s},
             )
+            if self._tracer is not None:
+                self._tracer.thread_name(1 + s, f"shard:{s}")
             session = OffloadSession(
-                shard_engine, micro_batch=1, clock=self.clock
+                shard_engine, micro_batch=1, clock=self.clock,
+                obs=obs, name=f"shard{s}", tid=1 + s,
             )
             session.record_budget_share(float(self.budget.shares[s]))
+            dispatcher = MultiEdgeDispatcher(
+                fleet_factory(s), strategy,
+                on_saturation=on_saturation, seed=seed + s,
+            )
+            dispatcher.attach_obs(obs, tid_base=100 + 100 * s)
             self.shards.append(
-                _Shard(
-                    index=s,
-                    sl=sl,
-                    session=session,
-                    dispatcher=MultiEdgeDispatcher(
-                        fleet_factory(s), strategy,
-                        on_saturation=on_saturation, seed=seed + s,
-                    ),
-                )
+                _Shard(index=s, sl=sl, session=session, dispatcher=dispatcher)
             )
         self._tick = 0
 
@@ -267,11 +278,24 @@ class FleetRuntime:
                 f"expected {self.n_streams} stream rows, got {x.shape[0]}"
             )
         now = self.clock()
-        for sh in self.shards:
-            sh.dispatcher.poll(now)
-        estimates = np.asarray(
-            self.plane.score(self.engine, x), np.float64
-        ).ravel()
+        prof = self._profiler
+        if prof is None:
+            for sh in self.shards:
+                sh.dispatcher.poll(now)
+            estimates = np.asarray(
+                self.plane.score(self.engine, x), np.float64
+            ).ravel()
+        else:
+            t0 = prof.begin()
+            for sh in self.shards:
+                sh.dispatcher.poll(now)
+            prof.add("fleet.poll", t0)
+            t0 = prof.begin()
+            estimates = np.asarray(
+                self.plane.score(self.engine, x), np.float64
+            ).ravel()
+            prof.add("fleet.score", t0)
+            t0 = prof.begin()
         offload = np.zeros(self.n_streams, bool)
         outcome = np.zeros(self.n_streams, np.int8)
         latency = np.full(self.n_streams, np.nan)
@@ -293,12 +317,25 @@ class FleetRuntime:
                     # the engine's own reward score for the frame
                     self.budget.record_reward(sh.index, d.estimate)
                     sh.session.record_reward(d.estimate)
+        if prof is not None:
+            prof.add("fleet.decide_dispatch", t0)
+            t0 = prof.begin()
         if self.budget.maybe_redistribute(now):
             for sh in self.shards:
                 sh.session.record_redistribution()
                 sh.session.record_budget_share(
                     float(self.budget.shares[sh.index])
                 )
+        if prof is not None:
+            prof.add("fleet.redistribute", t0)
+        if self._tracer is not None:
+            self._tracer.add_span(
+                "fleet.tick", now, now + self.arrival_period, tid=0,
+                args={
+                    "tick": self._tick,
+                    "offloaded": int(offload.sum()),
+                },
+            )
         self.clock.advance(self.arrival_period)
         self._tick += 1
         return FleetStep(

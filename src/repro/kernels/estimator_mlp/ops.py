@@ -19,8 +19,9 @@ import jax.numpy as jnp
 from repro.kernels.dispatch import resolve_path
 from repro.kernels.estimator_mlp.kernel import estimator_mlp_pallas
 from repro.kernels.estimator_mlp.ref import estimator_mlp_ref
+from repro.obs.jit_stats import register_jit
 
-_mlp_ref_jit = jax.jit(estimator_mlp_ref)
+_mlp_ref_jit = register_jit("estimator_mlp.ref", jax.jit(estimator_mlp_ref))
 
 
 def _pad_to(x, n, axis):
@@ -46,6 +47,9 @@ def _estimator_mlp_pallas(x, w1, b1, w2, b2, tile_b, interpret):
     b2_p = jnp.zeros((1, 128), jnp.float32).at[0, 0].set(b2.astype(jnp.float32))
     out = estimator_mlp_pallas(x_p, w1_p, b1_p, w2_p, b2_p, tile_b, interpret)
     return out[:B, 0]
+
+
+register_jit("estimator_mlp.pallas", _estimator_mlp_pallas)
 
 
 def estimator_mlp(

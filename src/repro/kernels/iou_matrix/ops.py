@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.kernels.dispatch import resolve_interpret, resolve_path
 from repro.kernels.iou_matrix.kernel import iou_matrix_batch_pallas, iou_matrix_pallas
 from repro.kernels.iou_matrix.ref import iou_matrix_batch_ref, iou_matrix_ref
+from repro.obs.jit_stats import register_jit
 
 __all__ = [
     "iou_matrix",
@@ -32,8 +33,10 @@ __all__ = [
     "resolve_path",
 ]
 
-_iou_ref_jit = jax.jit(iou_matrix_ref)
-_iou_batch_ref_jit = jax.jit(iou_matrix_batch_ref)
+_iou_ref_jit = register_jit("iou_matrix.ref", jax.jit(iou_matrix_ref))
+_iou_batch_ref_jit = register_jit(
+    "iou_matrix.batch_ref", jax.jit(iou_matrix_batch_ref)
+)
 
 
 def _ceil_to(n: int, multiple: int) -> int:
@@ -58,6 +61,9 @@ def _iou_matrix(a, b, tile_n, tile_m, interpret):
     b_p = jnp.zeros((Mp, 4), b.dtype).at[:M].set(b)
     out = iou_matrix_pallas(a_p.T, b_p.T, tile_n, tile_m, interpret=interpret)
     return out[:N, :M]
+
+
+register_jit("iou_matrix.pallas", _iou_matrix)
 
 
 def iou_matrix(
@@ -90,6 +96,9 @@ def _iou_matrix_batch(a, b, tile_b, tile_n, tile_m, interpret):
         tile_b, tile_n, tile_m, interpret=interpret,
     )
     return out[:B, :K, :M]
+
+
+register_jit("iou_matrix.batch_pallas", _iou_matrix_batch)
 
 
 def iou_matrix_batch(

@@ -42,6 +42,7 @@ from repro.core.features import feature_dim
 from repro.detection.batch import DetectionsBatch
 from repro.kernels.score_pipeline.kernel import score_pipeline_pallas
 from repro.kernels.score_pipeline.ref import score_pipeline_ref
+from repro.obs.jit_stats import register_jit
 
 PIPELINE_PATHS = ("lax", "pallas", "pallas_interpret")
 
@@ -97,7 +98,10 @@ def _lax_jit(donate: bool):
         kwargs = dict(static_argnames=("num_classes", "top_k"))
         if donate:
             kwargs["donate_argnums"] = (0, 1, 2, 3)
-        _LAX_JITS[donate] = jax.jit(score_pipeline_ref, **kwargs)
+        _LAX_JITS[donate] = register_jit(
+            "score_pipeline.lax_donate" if donate else "score_pipeline.lax",
+            jax.jit(score_pipeline_ref, **kwargs),
+        )
     return _LAX_JITS[donate]
 
 
@@ -146,6 +150,9 @@ def _score_pipeline_pallas(
         num_classes=num_classes, f_dim=F, tile_b=tile_b, interpret=interpret,
     )
     return out[:B, 0]
+
+
+register_jit("score_pipeline.pallas", _score_pipeline_pallas)
 
 
 def score_pipeline(

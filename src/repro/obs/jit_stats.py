@@ -1,0 +1,81 @@
+"""Per-callsite JAX retrace/compile accounting with zero hot-path cost.
+
+``jax.jit`` objects expose ``_cache_size()`` — the number of distinct
+traces the wrapped function has accumulated (one per unique
+shape/dtype/static-arg combination).  A growing cache size *is* the
+retrace count, so instead of wrapping every call (which would put a
+Python frame on the serve hot path), registration just remembers the jit
+object and reads its cache size on demand:
+
+    _score_jit = register_jit("score_pipeline.lax", jax.jit(fn))
+
+``snapshot()`` walks the registry; ``delta(before, after)`` is how a
+bench or a serve run reports "this phase retraced N times".  Sites whose
+jits are rebuilt per call (``FleetPlane`` builds shard closures inside
+each ``score``) can't be registered once — they call :func:`count_call`,
+a plain dict increment, to at least expose call frequency.
+
+The registry is module-global on purpose: jit caches are process-global
+(module-level jits in the kernels are shared by every engine), so
+per-run scoping happens by snapshot-delta, not by registry instance —
+:class:`~repro.obs.Obs` captures a baseline at construction and exports
+``current - baseline``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+_SITES: Dict[str, Any] = {}
+_CALLS: Dict[str, int] = {}
+
+
+def register_jit(site: str, fn: Any) -> Any:
+    """Register a jitted callable under ``site`` and return it unchanged
+    (safe to wrap the jit-construction expression in place)."""
+    _SITES[str(site)] = fn
+    return fn
+
+
+def count_call(site: str, n: int = 1) -> None:
+    """Manual call counter for sites that rebuild their jits per call
+    (shard_map closures) — a dict increment, nothing more."""
+    _CALLS[site] = _CALLS.get(site, 0) + n
+
+
+def _cache_size(fn: Any) -> int:
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        # not a jax.jit (reference-path plain function) or a jax version
+        # without the probe: report 0 rather than breaking observability
+        return 0
+
+
+def snapshot() -> Dict[str, Tuple[int, int]]:
+    """``{site: (traces, calls)}`` — ``traces`` is the jit cache size
+    (distinct compiled specializations so far), ``calls`` the manual
+    counter (0 unless the site uses :func:`count_call`)."""
+    out: Dict[str, Tuple[int, int]] = {}
+    for site, fn in _SITES.items():
+        out[site] = (_cache_size(fn), _CALLS.get(site, 0))
+    for site, n in _CALLS.items():
+        if site not in _SITES:
+            out[site] = (0, n)
+    return out
+
+
+def delta(
+    before: Dict[str, Tuple[int, int]], after: Dict[str, Tuple[int, int]]
+) -> Dict[str, Tuple[int, int]]:
+    """Per-site ``(retraces, calls)`` between two snapshots.  Sites new in
+    ``after`` count from zero."""
+    out: Dict[str, Tuple[int, int]] = {}
+    for site, (traces, calls) in after.items():
+        b_traces, b_calls = before.get(site, (0, 0))
+        out[site] = (traces - b_traces, calls - b_calls)
+    return out
+
+
+def sites() -> Tuple[str, ...]:
+    """Registered site names (tests use this to assert coverage)."""
+    return tuple(sorted(set(_SITES) | set(_CALLS)))

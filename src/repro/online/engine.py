@@ -107,7 +107,13 @@ class AdaptiveEngine:
     mini-refits only.
     """
 
-    def __init__(self, engine: OffloadEngine, config: Optional[OnlineConfig] = None):
+    def __init__(
+        self,
+        engine: OffloadEngine,
+        config: Optional[OnlineConfig] = None,
+        *,
+        obs: Optional[Any] = None,
+    ):
         if engine.calibration_scores is None:
             raise RuntimeError("AdaptiveEngine wraps a *fitted* engine")
         self.engine = engine
@@ -138,6 +144,31 @@ class AdaptiveEngine:
         self._since_update = 0
         self._since_refit = 0
         self._unsolved_lo = 0  # buffer offset of rows not yet ingested
+        # observability: update counters by kind, the live drift ratio
+        # multiplier as a callback gauge, and one traced span per applied
+        # update (stamped from whatever clock the obs handle is bound to)
+        self._profiler = obs.profiler if obs is not None else None
+        self._tracer = obs.tracer if obs is not None else None
+        self._update_counters: Optional[Dict[str, Any]] = None
+        reg = obs.metrics if obs is not None else None
+        if reg is not None:
+            self._update_counters = {
+                kind: reg.counter(
+                    "repro_adaptive_updates_total", {"kind": kind},
+                    help="closed-loop model updates applied, by kind",
+                )
+                for kind in ("incremental", "refit", "drift")
+            }
+            reg.gauge(
+                "repro_adaptive_ratio_scale",
+                help="drift-gated offload ratio multiplier",
+                fn=self.drift.ratio_multiplier,
+            )
+            reg.gauge(
+                "repro_adaptive_observations",
+                help="realized rewards observed so far",
+                fn=lambda: self.observations,
+            )
 
     # ------------------------------------------------------------- plumbing
 
@@ -281,8 +312,12 @@ class AdaptiveEngine:
         drift_forced = self.drift.drifted
         refit = False
         incremental = False
+        prof = self._profiler
         if drift_forced or self._since_refit >= self.config.refit_every:
+            t0 = prof.begin() if prof is not None else 0.0
             refit = self._full_refit()
+            if prof is not None:
+                prof.add("online.refit", t0)
             if refit:
                 self._since_refit = 0
                 self._since_update = 0
@@ -292,7 +327,10 @@ class AdaptiveEngine:
                 else:
                     self.drift.reset(count_event=False)
         elif self._since_update >= self.config.update_every:
+            t0 = prof.begin() if prof is not None else 0.0
             incremental = self._incremental_update()
+            if prof is not None:
+                prof.add("online.incremental", t0)
             if incremental:
                 self._since_update = 0
                 # the model just moved under the detector's feet — re-anchor
@@ -301,6 +339,23 @@ class AdaptiveEngine:
         recalibrated = False
         if refit or incremental:
             recalibrated = self._refresh_calibration()
+            if self._update_counters is not None:
+                if refit:
+                    self._update_counters["refit"].inc()
+                    if drift_forced:
+                        self._update_counters["drift"].inc()
+                else:
+                    self._update_counters["incremental"].inc()
+            if self._tracer is not None:
+                t = self._tracer.clock()
+                self._tracer.instant(
+                    "online.update", t=t,
+                    args={
+                        "kind": "refit" if refit else "incremental",
+                        "drift": bool(drift_forced and refit),
+                        "recalibrated": bool(recalibrated),
+                    },
+                )
         return UpdateReport(
             incremental=incremental,
             refit=refit,

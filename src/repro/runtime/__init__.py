@@ -16,9 +16,14 @@ The engine (repro.api) is the fitted decision artifact; this package is the
 - :class:`OffloadRuntime` / :func:`simulate` — the deterministic seeded
   end-to-end driver producing exact per-step :class:`StreamTrace` records.
 
+Every layer accepts an optional ``obs=`` :class:`repro.obs.Obs` handle
+(re-exported here): metrics registry + manual-clock span tracing +
+host-phase profiling, noop-by-default.
+
 See docs/API.md ("The streaming runtime") for the lifecycle and a migration
 note from direct ``engine.decide()`` loops.
 """
+from repro.obs import Obs
 from repro.runtime.clock import ManualClock
 from repro.runtime.dispatch import (
     OUTCOME_DEGRADED,
@@ -47,6 +52,7 @@ from repro.runtime.simulate import (
 
 __all__ = [
     "ManualClock",
+    "Obs",
     "OffloadSession",
     "SessionTelemetry",
     "StepDecision",

@@ -82,6 +82,31 @@ class MultiEdgeDispatcher:
         self._rng = np.random.default_rng(seed)
         self.dropped = 0
         self.degraded = 0
+        self._profiler: Optional[Any] = None
+        self._outcomes: Optional[Dict[str, Any]] = None
+
+    # --------------------------------------------------------------- obs
+
+    def attach_obs(self, obs: Optional[Any], tid_base: int = 100) -> None:
+        """Wire the dispatcher and its fleet into an observability handle:
+        per-outcome dispatch counters, the host-phase profiler, and one
+        trace track per edge starting at ``tid_base``."""
+        if obs is None:
+            return
+        self._profiler = obs.profiler
+        reg = obs.metrics
+        if reg is not None:
+            self._outcomes = {
+                outcome: reg.counter(
+                    "repro_dispatch_total", {"outcome": outcome},
+                    help="dispatch decisions by outcome",
+                )
+                for outcome in (
+                    OUTCOME_OFFLOADED, OUTCOME_DEGRADED, OUTCOME_DROPPED
+                )
+            }
+        for i, e in enumerate(self.edges):
+            e.attach_obs(obs, tid=tid_base + i)
 
     # --------------------------------------------------------------- routing
 
@@ -128,21 +153,40 @@ class MultiEdgeDispatcher:
     def dispatch(self, now: float, step: int, estimate: float) -> DispatchResult:
         """Route one accepted offload; on fleet saturation apply the
         drop-or-degrade policy."""
-        self.poll(now)
-        for i in self._probe_order(estimate):
+        prof = self._profiler
+        if prof is None:
+            self.poll(now)
+        else:
+            t0 = prof.begin()
+            self.poll(now)
+            prof.add("dispatch.poll", t0)
+            t0 = prof.begin()
+        order = self._probe_order(estimate)
+        if prof is not None:
+            prof.add("dispatch.probe_order", t0)
+            t0 = prof.begin()
+        for i in order:
             lat = self.edges[i].try_admit(now, step, estimate)
             if lat is not None:
+                if prof is not None:
+                    prof.add("dispatch.admit", t0)
+                if self._outcomes is not None:
+                    self._outcomes[OUTCOME_OFFLOADED].inc()
                 return DispatchResult(
                     step=step, estimate=estimate, edge=self.edges[i].name,
                     latency=lat, outcome=OUTCOME_OFFLOADED,
                     breakdown=self.edges[i].last_breakdown,
                 )
+        if prof is not None:
+            prof.add("dispatch.admit", t0)
         if self.on_saturation == "degrade":
             self.degraded += 1
             outcome = OUTCOME_DEGRADED
         else:
             self.dropped += 1
             outcome = OUTCOME_DROPPED
+        if self._outcomes is not None:
+            self._outcomes[outcome].inc()
         return DispatchResult(
             step=step, estimate=estimate, edge=None, latency=None, outcome=outcome
         )

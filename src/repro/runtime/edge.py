@@ -143,6 +143,8 @@ class EdgeWorker:
         else:
             self.uplink = None
         self.last_breakdown: Optional[LatencyBreakdown] = None
+        self._tracer: Optional[Any] = None
+        self._tid = 0
         self._rng = np.random.default_rng(seed)
         self._now = 0.0
         # min-heap of (t_done, step, t_admit); admit time rides in the entry
@@ -162,6 +164,40 @@ class EdgeWorker:
             else None
         )
 
+    # --------------------------------------------------------------- obs
+
+    def attach_obs(self, obs: Optional[Any], tid: int = 0) -> None:
+        """Wire this edge into an observability handle: live callback
+        gauges over its existing counters (no hot-path mutation anywhere)
+        and a trace track (``tid``) for its offload span groups."""
+        if obs is None:
+            return
+        self._tracer = obs.tracer
+        self._tid = int(tid)
+        if self._tracer is not None:
+            self._tracer.thread_name(self._tid, f"edge:{self.name}")
+        reg = obs.metrics
+        if reg is not None:
+            labels = {"edge": self.name}
+            reg.gauge(
+                "repro_edge_inflight", labels,
+                help="offloads currently running on the edge",
+                fn=lambda: len(self._inflight),
+            )
+            reg.gauge(
+                "repro_edge_queue_depth", labels,
+                help="frames queued or transmitting on the uplink",
+                fn=lambda: self.uplink.occupancy if self.uplink is not None else 0,
+            )
+            reg.gauge(
+                "repro_edge_accepted", labels,
+                help="offloads admitted so far", fn=lambda: self.accepted,
+            )
+            reg.gauge(
+                "repro_edge_rejected", labels,
+                help="offloads refused so far", fn=lambda: self.rejected,
+            )
+
     # ------------------------------------------------------------------ time
 
     def _advance(self, now: float) -> None:
@@ -180,6 +216,11 @@ class EdgeWorker:
             )
             done.append(job)
             self.completed.append(job)
+            if self._tracer is not None:
+                self._tracer.instant(
+                    "result.return", t=t_done, tid=self._tid,
+                    args={"step": step},
+                )
         return done
 
     # ------------------------------------------------------------- admission
@@ -263,6 +304,24 @@ class EdgeWorker:
             )
         heapq.heappush(self._inflight, (self._now + lat, int(step), self._now))
         self.accepted += 1
+        if self._tracer is not None:
+            # the simulator knows the job's whole extent at admit time, so
+            # the span group is synthesized here: an async `offload` slice
+            # with nested queue → transmit → service children (async so
+            # concurrent jobs on one edge can overlap without mis-nesting)
+            tr = self._tracer
+            bd = self.last_breakdown
+            t0, t1 = self._now, self._now + lat
+            jid = tr.next_id()
+            tr.add_async_span(
+                "offload", t0, t1, id=jid, tid=self._tid,
+                args={"step": int(step), "edge": self.name},
+            )
+            tq = t0 + bd.queue
+            tt = tq + bd.transmit
+            tr.add_async_span("queue", t0, tq, id=jid, tid=self._tid)
+            tr.add_async_span("transmit", tq, tt, id=jid, tid=self._tid)
+            tr.add_async_span("service", tt, t1, id=jid, tid=self._tid)
         return lat
 
     # ----------------------------------------------------------------- stats

@@ -31,6 +31,7 @@ _MIN_BUFFER_ROWS = 64
 
 from repro.api.engine import OffloadEngine
 from repro.api.policies import make_policy, policy_context_params
+from repro.obs.metrics import Counter, Gauge, Histogram, DEFAULT_TIME_BUCKETS
 
 
 @dataclass(frozen=True)
@@ -169,6 +170,22 @@ class OffloadSession:
         results (possibly shared between sessions when the tracker is
         batched over streams).  The session itself never calls it; it rides
         here so stream state travels as one object.
+    obs : repro.obs.Obs or None
+        Observability handle.  The session's telemetry counters *are*
+        metric instruments (``repro.obs.metrics``); with an obs handle
+        whose metrics plane is on they are created through its registry —
+        labeled ``{stream=<name>}`` — so Prometheus/JSON exports see the
+        live values with no second accounting path.  With ``obs=None``
+        (default) the instruments are standalone objects and nothing else
+        changes: ``telemetry.as_dict()`` payloads are byte-identical
+        either way.  The tracer plane (when on) receives one
+        ``session.flush`` span per scoring drain on track ``tid``.
+    name : str or None
+        Stream label used for this session's metric series; auto-numbered
+        within the registry when omitted.
+    tid : int
+        Trace track for this session's spans (runtimes assign one per
+        stream).
 
     Each injected callable reaches the policy constructor only when the
     policy's ``context_params`` declares it — runtime wiring, never part of
@@ -188,6 +205,9 @@ class OffloadSession:
         staleness: Optional[Callable[[], float]] = None,
         scene_change: Optional[Callable[[], float]] = None,
         tracker: Optional[Any] = None,
+        obs: Optional[Any] = None,
+        name: Optional[str] = None,
+        tid: int = 0,
     ):
         if engine.calibration_scores is None:
             raise RuntimeError("OffloadSession over an unfitted engine")
@@ -221,22 +241,110 @@ class OffloadSession:
         self._pending_rows = 0
         self._next_step = 0                   # arrival index of next submit
         self._window = deque(maxlen=max(int(telemetry_window), 1))
-        self._processed = 0
-        self._offloaded = 0
-        self._estimate_sum = 0.0
-        self._reward_sum = 0.0
-        self._rewards_recorded = 0
-        self._staleness_sum = 0.0
-        self._covered_frames = 0
-        self._accuracy_sum = 0.0
-        self._effective_frames = 0
-        self._rtt_sum = 0.0
-        self._rtt_samples = 0
-        self._bandwidth_sum = 0.0
-        self._bandwidth_samples = 0
-        self._online_updates = 0
-        self._budget_share = 0.0
-        self._budget_redistributions = 0
+        self._tracer = obs.tracer if obs is not None else None
+        self._profiler = obs.profiler if obs is not None else None
+        self._tid = int(tid)
+        self._flush_t0: Optional[float] = None
+        self._init_instruments(
+            obs.metrics if obs is not None else None, name
+        )
+
+    def _init_instruments(self, reg, name: Optional[str]) -> None:
+        """The telemetry counters ARE metric instruments: standalone
+        objects when observability is off, registry-backed (walked by the
+        exporters) when an obs handle carries a metrics plane.  One write
+        path either way — `telemetry` is a view, never a second ledger."""
+        if reg is not None:
+            opened = reg.counter(
+                "repro_sessions_total", help="sessions opened on this registry"
+            )
+            if name is None:
+                name = str(opened.value)
+            opened.inc()
+            labels: Optional[Dict[str, str]] = {"stream": str(name)}
+            counter, gauge, histogram = reg.counter, reg.gauge, reg.histogram
+        else:
+            labels = None
+            counter = lambda n, labels=None, help="": Counter(n)
+            gauge = lambda n, labels=None, help="", fn=None: Gauge(n, fn=fn)
+            histogram = (
+                lambda n, buckets=DEFAULT_TIME_BUCKETS, labels=None, help="":
+                Histogram(n, buckets=buckets)
+            )
+        self._processed = counter(
+            "repro_frames_processed_total", labels, help="frames decided"
+        )
+        self._offloaded = counter(
+            "repro_frames_offloaded_total", labels,
+            help="frames the policy sent to an edge",
+        )
+        self._estimate_sum = counter(
+            "repro_estimate_sum_total", labels, help="sum of reward estimates"
+        )
+        self._reward_sum = counter(
+            "repro_reward_sum_total", labels, help="sum of realized rewards"
+        )
+        self._rewards_recorded = counter(
+            "repro_rewards_recorded_total", labels, help="realized rewards seen"
+        )
+        self._staleness_sum = counter(
+            "repro_staleness_sum_total", labels,
+            help="summed age of propagated edge results (frames)",
+        )
+        self._covered_frames = counter(
+            "repro_covered_frames_total", labels,
+            help="frames served from a propagated edge result",
+        )
+        self._accuracy_sum = counter(
+            "repro_effective_accuracy_sum_total", labels,
+            help="summed per-frame effective accuracy",
+        )
+        self._effective_frames = counter(
+            "repro_effective_frames_total", labels,
+            help="frames with an effective-accuracy sample",
+        )
+        self._rtt = histogram(
+            "repro_offload_rtt", DEFAULT_TIME_BUCKETS, labels,
+            help="measured offload round-trip time (sim time units)",
+        )
+        self._bandwidth_sum = counter(
+            "repro_bandwidth_sum_total", labels,
+            help="summed measured uplink goodput",
+        )
+        self._bandwidth_samples = counter(
+            "repro_bandwidth_samples_total", labels, help="goodput samples"
+        )
+        self._online_updates = counter(
+            "repro_online_updates_total", labels,
+            help="closed-loop model updates visible to this stream",
+        )
+        self._budget_share = gauge(
+            "repro_budget_share", labels,
+            help="stream's share of the fleet offload budget",
+        )
+        self._budget_redistributions = counter(
+            "repro_budget_redistributions_total", labels,
+            help="fleet budget redistributions applied",
+        )
+        # live views with zero hot-path cost: evaluated only at collection
+        gauge(
+            "repro_realized_ratio", labels,
+            help="offloaded / processed",
+            fn=lambda: (
+                self._offloaded.value / self._processed.value
+                if self._processed.value else 0.0
+            ),
+        )
+        gauge(
+            "repro_pending_frames", labels,
+            help="frames buffered awaiting a scoring flush",
+            fn=lambda: self._pending_rows,
+        )
+        gauge(
+            "repro_target_ratio", labels,
+            help="session target offload ratio",
+            fn=lambda: self._ratio,
+        )
 
     # ------------------------------------------------------------- streaming
 
@@ -311,6 +419,9 @@ class OffloadSession:
             raise ValueError(f"feature blocks must be 2-D, got {block.shape}")
         rows = block.shape[0]
         if rows:
+            if self._tracer is not None and self._pending_rows == 0:
+                # the flush span opens when the first frame starts waiting
+                self._flush_t0 = self._tracer.clock()
             need = self._pending_rows + rows
             if self._buf is None or self._buf.shape[1] != block.shape[1]:
                 cap = max(_MIN_BUFFER_ROWS, self.micro_batch, need)
@@ -338,16 +449,29 @@ class OffloadSession:
             return []
         rows = min(rows, self._pending_rows)
         head = self._buf[:rows]
+        prof = self._profiler
         # device scoring; one host conversion at the policy boundary (the
         # estimates are materialized before the buffer is compacted)
-        estimates = np.asarray(
-            self.engine.score_device(features=head), np.float64
-        ).ravel()
+        if prof is None:
+            estimates = np.asarray(
+                self.engine.score_device(features=head), np.float64
+            ).ravel()
+        else:
+            t0 = prof.begin()
+            estimates = np.asarray(
+                self.engine.score_device(features=head), np.float64
+            ).ravel()
+            prof.add("session.score", t0)
         rem = self._pending_rows - rows
         if rem:
             self._buf[:rem] = self._buf[rows : self._pending_rows].copy()
         self._pending_rows = rem
-        return self._decide(estimates)
+        if prof is None:
+            return self._decide(estimates)
+        t0 = prof.begin()
+        out = self._decide(estimates)
+        prof.add("session.decide", t0)
+        return out
 
     def submit_scored(self, estimates: np.ndarray) -> List[StepDecision]:
         """Decide a block of already-scored frames in arrival order — the
@@ -384,10 +508,19 @@ class OffloadSession:
         # the queue held exactly the arrivals not yet decided, so the drained
         # rows are the arrival indices trailing the still-pending ones
         first = self._next_step - self._pending_rows - len(estimates)
-        self._processed += len(estimates)
-        self._offloaded += int(offload.sum())
-        self._estimate_sum += float(estimates.sum())
+        n_off = int(offload.sum())
+        self._processed.inc(len(estimates))
+        self._offloaded.inc(n_off)
+        self._estimate_sum.inc(float(estimates.sum()))
         self._window.extend(bool(o) for o in offload)
+        if self._tracer is not None:
+            now = self._tracer.clock()
+            t0 = now if self._flush_t0 is None else self._flush_t0
+            self._tracer.add_span(
+                "session.flush", t0, now, tid=self._tid,
+                args={"frames": len(estimates), "offloaded": n_off},
+            )
+            self._flush_t0 = now if self._pending_rows else None
         return [
             StepDecision(step=first + i, estimate=float(est), offload=bool(off))
             for i, (est, off) in enumerate(zip(estimates, offload))
@@ -431,83 +564,81 @@ class OffloadSession:
     def record_reward(self, reward: float) -> None:
         """Account a realized per-frame reward (e.g. observed quality delta)
         into the session telemetry."""
-        self._reward_sum += float(reward)
-        self._rewards_recorded += 1
+        self._reward_sum.inc(float(reward))
+        self._rewards_recorded.inc()
 
     def record_staleness(self, staleness: float) -> None:
         """Account one frame served from a propagated (stale) edge result;
         ``staleness`` is the age of that result in frames."""
-        self._staleness_sum += float(staleness)
-        self._covered_frames += 1
+        self._staleness_sum.inc(float(staleness))
+        self._covered_frames.inc()
 
     def record_effective_accuracy(self, accuracy: float) -> None:
         """Account one frame's effective accuracy — the AP of whatever was
         actually served for it (weak output or propagated edge result)."""
-        self._accuracy_sum += float(accuracy)
-        self._effective_frames += 1
+        self._accuracy_sum.inc(float(accuracy))
+        self._effective_frames.inc()
 
     def record_rtt(self, rtt: float) -> None:
         """Account one completed offload's measured round trip."""
-        self._rtt_sum += float(rtt)
-        self._rtt_samples += 1
+        self._rtt.observe(float(rtt))
 
     def record_bandwidth(self, bandwidth: float) -> None:
         """Account one measured uplink goodput sample (bits per time unit)."""
-        self._bandwidth_sum += float(bandwidth)
-        self._bandwidth_samples += 1
+        self._bandwidth_sum.inc(float(bandwidth))
+        self._bandwidth_samples.inc()
 
     def record_update(self) -> None:
         """Account one closed-loop model update visible to this stream."""
-        self._online_updates += 1
+        self._online_updates.inc()
 
     def record_budget_share(self, share: float) -> None:
         """Stamp the stream's current share of the fleet-wide offload
         budget (see :class:`repro.fleet.budget.FleetBudget`)."""
-        self._budget_share = float(share)
+        self._budget_share.set(float(share))
 
     def record_redistribution(self) -> None:
         """Account one fleet budget redistribution applied to this stream."""
-        self._budget_redistributions += 1
+        self._budget_redistributions.inc()
 
     # ------------------------------------------------------------- telemetry
 
     @property
     def telemetry(self) -> SessionTelemetry:
-        n = self._processed
+        # a *view* over the metric instruments: every field derives from
+        # instrument state the same way the old scalar counters did, so
+        # payloads are byte-stable with observability on, off, or absent
+        n = self._processed.value
+        offloaded = self._offloaded.value
+        covered = self._covered_frames.value
+        effective = self._effective_frames.value
+        bw_samples = self._bandwidth_samples.value
         roll = list(self._window)
         return SessionTelemetry(
             processed=n,
-            offloaded=self._offloaded,
-            realized_ratio=self._offloaded / n if n else 0.0,
+            offloaded=offloaded,
+            realized_ratio=offloaded / n if n else 0.0,
             rolling_ratio=float(np.mean(roll)) if roll else 0.0,
-            mean_estimate=self._estimate_sum / n if n else 0.0,
+            mean_estimate=self._estimate_sum.value / n if n else 0.0,
             target_ratio=self._ratio,
             pending=self._pending_rows,
-            reward_sum=self._reward_sum,
-            rewards_recorded=self._rewards_recorded,
-            covered_frames=self._covered_frames,
+            reward_sum=float(self._reward_sum.value),
+            rewards_recorded=self._rewards_recorded.value,
+            covered_frames=covered,
             mean_staleness=(
-                self._staleness_sum / self._covered_frames
-                if self._covered_frames
-                else 0.0
+                self._staleness_sum.value / covered if covered else 0.0
             ),
-            effective_frames=self._effective_frames,
+            effective_frames=effective,
             mean_effective_accuracy=(
-                self._accuracy_sum / self._effective_frames
-                if self._effective_frames
-                else 0.0
+                self._accuracy_sum.value / effective if effective else 0.0
             ),
-            rtt_samples=self._rtt_samples,
-            mean_rtt=(
-                self._rtt_sum / self._rtt_samples if self._rtt_samples else 0.0
-            ),
-            bandwidth_samples=self._bandwidth_samples,
+            rtt_samples=self._rtt.n,
+            mean_rtt=self._rtt.mean,
+            bandwidth_samples=bw_samples,
             mean_bandwidth=(
-                self._bandwidth_sum / self._bandwidth_samples
-                if self._bandwidth_samples
-                else 0.0
+                self._bandwidth_sum.value / bw_samples if bw_samples else 0.0
             ),
-            online_updates=self._online_updates,
-            budget_share=self._budget_share,
-            budget_redistributions=self._budget_redistributions,
+            online_updates=self._online_updates.value,
+            budget_share=float(self._budget_share.value),
+            budget_redistributions=self._budget_redistributions.value,
         )

@@ -229,6 +229,7 @@ class OffloadRuntime:
         on_saturation: str = "degrade",
         seed: int = 0,
         net_state: Optional[Any] = None,
+        obs: Optional[Any] = None,
     ):
         self.engine = engine
         self.dispatcher = MultiEdgeDispatcher(
@@ -239,6 +240,14 @@ class OffloadRuntime:
         if net_state is not None:
             net_state.bind_clock(self.clock)
             net_state.bind_fleet(len(self.dispatcher.edges))
+        # observability: spans are stamped in *simulated* time (the manual
+        # clock), edges get trace tracks 100+, streams 1+ (0 is the driver)
+        self.obs = obs
+        if obs is not None:
+            obs.bind_clock(self.clock)
+            if obs.tracer is not None:
+                obs.tracer.thread_name(0, "runtime")
+            self.dispatcher.attach_obs(obs, tid_base=100)
 
     def _best_edge(self) -> EdgeWorker:
         """The edge a new offload would most plausibly land on: the one
@@ -280,13 +289,22 @@ class OffloadRuntime:
         staleness: Optional[Any] = None,
         scene_change: Optional[Any] = None,
         tracker: Optional[Any] = None,
+        name: Optional[str] = None,
+        tid: int = 1,
     ) -> OffloadSession:
         """A new per-stream session sharing the frozen engine; time-based
         policies see the runtime's manual clock, queue-aware policies
         (``queue_aware`` / ``value_iteration``) see live congestion probes
         over the runtime's fleet, and video runtimes thread their temporal
         probes (``staleness`` / ``scene_change``) and per-stream tracker
-        through unchanged."""
+        through unchanged.  The runtime's ``obs`` handle (if any) rides
+        into the session: its telemetry counters become registry-backed
+        series labeled ``{stream=name}`` and its flush spans land on trace
+        track ``tid``."""
+        if self.obs is not None and self.obs.tracer is not None:
+            self.obs.tracer.thread_name(
+                tid, f"session:{tid - 1 if name is None else name}"
+            )
         return OffloadSession(
             self.engine,
             ratio=ratio,
@@ -298,6 +316,9 @@ class OffloadRuntime:
             staleness=staleness,
             scene_change=scene_change,
             tracker=tracker,
+            obs=self.obs,
+            name=name,
+            tid=tid,
         )
 
     # ------------------------------------------------------------- streaming
@@ -320,7 +341,13 @@ class OffloadRuntime:
         new target ratio, applied before that frame is submitted (mid-stream
         re-budgeting, paper Table I); the pending micro-batch is flushed
         first so earlier arrivals are never re-budgeted retroactively."""
-        x = self.engine.features(weak_outputs, features=features)
+        prof = self.obs.profiler if self.obs is not None else None
+        if prof is None:
+            x = self.engine.features(weak_outputs, features=features)
+        else:
+            t0 = prof.begin()
+            x = self.engine.features(weak_outputs, features=features)
+            prof.add("serve.features", t0)
         session = self.open_session(ratio=ratio, micro_batch=micro_batch)
         rebudget = dict(set_ratio_at or {})
         t_arrival: Dict[int, float] = {}
@@ -359,14 +386,32 @@ class OffloadRuntime:
                     )
                 )
 
-        for step, row in enumerate(x):
-            if step in rebudget:
-                settle(session.flush())  # decide earlier arrivals at the old budget
-                session.set_ratio(rebudget[step])
-            t_arrival[step] = self.clock()
-            settle(session.submit(features=row))
-            self.clock.advance(arrival_period)
-        settle(session.flush())
+        if prof is None:
+            for step, row in enumerate(x):
+                if step in rebudget:
+                    # decide earlier arrivals at the old budget
+                    settle(session.flush())
+                    session.set_ratio(rebudget[step])
+                t_arrival[step] = self.clock()
+                settle(session.submit(features=row))
+                self.clock.advance(arrival_period)
+            settle(session.flush())
+        else:
+            # profiled serve loop: same schedule, host time attributed to
+            # submit (enqueue+score+decide) vs settle (records+dispatch)
+            for step, row in enumerate(x):
+                if step in rebudget:
+                    settle(session.flush())
+                    session.set_ratio(rebudget[step])
+                t_arrival[step] = self.clock()
+                t0 = prof.begin()
+                decisions = session.submit(features=row)
+                prof.add("serve.submit", t0)
+                t0 = prof.begin()
+                settle(decisions)
+                prof.add("serve.settle", t0)
+                self.clock.advance(arrival_period)
+            settle(session.flush())
 
         # drain: run the clock past the last in-flight completion
         horizon = max(
@@ -399,6 +444,7 @@ def simulate(
     set_ratio_at: Optional[Dict[int, float]] = None,
     seed: int = 0,
     net_state: Optional[Any] = None,
+    obs: Optional[Any] = None,
 ) -> StreamTrace:
     """One-call deterministic streaming simulation: 1 weak device emitting
     the given frames toward ``n_edges`` heterogeneous edges (or an explicit
@@ -406,7 +452,7 @@ def simulate(
     fleet = list(edges) if edges is not None else default_edge_fleet(n_edges, seed)
     runtime = OffloadRuntime(
         engine, fleet, strategy=strategy, on_saturation=on_saturation, seed=seed,
-        net_state=net_state,
+        net_state=net_state, obs=obs,
     )
     return runtime.serve(
         weak_outputs,

@@ -248,16 +248,25 @@ class VideoRuntime(OffloadRuntime):
                 staleness=make_staleness(st),
                 scene_change=make_scene(st),
                 tracker=tracker,
+                name=str(b),
+                tid=1 + b,
             )
-            for st in streams
+            for b, st in enumerate(streams)
         ]
+        prof = self.obs.profiler if self.obs is not None else None
 
         rows: List[List[Dict[str, Any]]] = [[] for _ in range(B)]
         served: List[List[Detections]] = [[] for _ in range(B)]
         for t in range(T):
             now = self.clock()
             self.dispatcher.poll(now)
-            tf = tracker.update(weak.frame(t))
+            if prof is None:
+                tf = tracker.update(weak.frame(t))
+            else:
+                _pt0 = prof.begin()
+                tf = tracker.update(weak.frame(t))
+                prof.add("video.track", _pt0)
+                _pt0 = prof.begin()
             churn = tf.churn()
             for b, (st, session) in enumerate(zip(streams, sessions)):
                 st["frame"] = t
@@ -309,15 +318,21 @@ class VideoRuntime(OffloadRuntime):
                         source=source, staleness=staleness,
                     )
                 )
+            if prof is not None:
+                prof.add("video.serve_frames", _pt0)
             self.clock.advance(arrival_period)
         self.dispatcher.poll(self.clock())
 
         # score what was actually served, one batched matcher call
+        if prof is not None:
+            _pt0 = prof.begin()
         acc = frame_accuracies(
             [d for per in served for d in per],
             [clip.gt(t, b) for b in range(B) for t in range(T)],
             iou_thresholds,
         ).reshape(B, T)
+        if prof is not None:
+            prof.add("video.score_accuracy", _pt0)
         traces = []
         for b, session in enumerate(sessions):
             records = []
