@@ -29,6 +29,8 @@ benchmarks/roofline.py); `derived` carries the table's headline quantity
                              per-offload overhead
   bench_fleet_scale          sharded data-plane scoring streams/s at 1 vs N
                              forced host-device shards (subprocess per view)
+  bench_mobility_handover    motion-scan rollout throughput + handover-aware
+                             vs static-pin effective accuracy at equal budget
   bench_iou                  iou_matrix ref vs Pallas side by side (+ratio)
   bench_kernels              Pallas oracles (jnp path) per-call time
 
@@ -762,6 +764,57 @@ def bench_obs_overhead() -> None:
     )
 
 
+def bench_mobility_handover(n_clients: int = 4, n_steps: int = 120) -> None:
+    """The repro.mobility plane: jitted motion-scan rollout throughput
+    (client-steps/s vs the pure-Python reference loop), and the headline
+    quantity — handover-aware dispatch vs static edge pinning, effective
+    accuracy at equal realized offload budget."""
+    from repro.mobility import (
+        MotionConfig,
+        default_mobile_scenario,
+        rollout,
+        rollout_ref,
+        run_mobile_scenario,
+    )
+
+    cfg = MotionConfig(area=(1200.0, 600.0), speed=14.0)
+    T, n = 256, 64
+    rollout(cfg, n, T, seed=0)  # compile the scan
+    us_scan = _timeit(lambda: rollout(cfg, n, T, seed=0), n=5)
+    us_ref = _timeit(lambda: rollout_ref(cfg, n, T, seed=0), n=2)
+    steps = T * n
+    emit(
+        f"mobility_motion_scan_t{T}_b{n}", us_scan / steps,
+        f"client_steps_per_s={steps / (us_scan / 1e6):.0f}"
+        f";ref_loop_us={us_ref:.0f}"
+        f";speedup={us_ref / max(us_scan, 1e-9):.1f}x",
+        shape={"steps": T, "clients": n, "model": cfg.model},
+    )
+
+    sc = default_mobile_scenario(n_clients=n_clients, n_steps=n_steps, seed=0)
+
+    def serve(mode):
+        return run_mobile_scenario(sc, mode)
+
+    us_serve = _timeit(lambda: serve("handover"), n=2, warmup=1)
+    handover = serve("handover")
+    static = serve("static")
+    frames = n_clients * n_steps
+    gain = (
+        handover.mean_effective_accuracy() - static.mean_effective_accuracy()
+    )
+    emit(
+        f"mobility_handover_b{frames}", us_serve / frames,
+        f"frames_per_s={frames / (us_serve / 1e6):.0f}"
+        f";eff_acc_gain={gain:+.4f}"
+        f";handover={handover.mean_effective_accuracy():.4f}"
+        f";static={static.mean_effective_accuracy():.4f}"
+        f";handovers={handover.n_handovers()}",
+        shape={"clients": n_clients, "steps": n_steps,
+               "stations": len(sc.coverage.stations)},
+    )
+
+
 def _git_rev() -> str:
     try:
         return subprocess.run(
@@ -838,6 +891,7 @@ def registered_benches(interpret=None):
         ("video_pipeline", bench_video_pipeline),
         ("online_update", bench_online_update),
         ("fleet_scale", bench_fleet_scale),
+        ("mobility_handover", bench_mobility_handover),
         ("iou", lambda: bench_iou(interpret=interpret)),
         ("kernels", bench_kernels),
         ("obs_overhead", bench_obs_overhead),

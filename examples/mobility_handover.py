@@ -1,0 +1,94 @@
+"""Moving clients, coverage-dependent links, and mid-stream handover.
+
+1. seeded mobility traces: the jitted ``lax.scan`` rollout matches the
+   pure-Python reference oracle and reruns bit-identically;
+2. the coverage map: per-position signal strength, rate factors, and the
+   time-to-coverage-loss probe the ``mobility_aware`` policy discounts by;
+3. the headline: handover-aware dispatch vs static edge pinning at the
+   same realized offload budget — handover keeps frames landing on a
+   nearby station, so offloads stay cheap and results stay fresh;
+4. in-flight semantics: what happens to results still in transit when
+   their source station is abandoned (survive / die / stale).
+
+Run:  python examples/mobility_handover.py
+      (after `pip install -e .`, or prefix with PYTHONPATH=src)
+"""
+import numpy as np
+
+from repro.mobility import (
+    CoverageMap,
+    MotionConfig,
+    default_mobile_scenario,
+    default_stations,
+    rollout,
+    rollout_ref,
+    run_mobile_scenario,
+)
+
+
+def motion_demo() -> None:
+    print("== seeded motion: scan rollout vs Python reference ==")
+    for model in ("waypoint", "random_walk"):
+        cfg = MotionConfig(model=model, area=(1000.0, 600.0), speed=12.0)
+        scan = rollout(cfg, 4, 80, seed=0)
+        ref = rollout_ref(cfg, 4, 80, seed=0)
+        again = rollout(cfg, 4, 80, seed=0)
+        print(
+            f"  {model:12s} max|scan-ref| = {np.abs(scan - ref).max():.2e}"
+            f"   rerun bit-identical: {np.array_equal(scan, again)}"
+        )
+
+
+def coverage_demo() -> None:
+    print("== coverage: signal, rate factor, time-to-loss ==")
+    cov = CoverageMap(default_stations(3, area=(1200.0, 600.0)))
+    # a client walking the corridor left to right
+    T = 60
+    trace = np.stack(
+        [np.linspace(50.0, 1150.0, T), np.full(T, 300.0)], axis=-1
+    )
+    for t in (0, 15, 30):
+        i, rss = cov.best(trace[t])
+        ttl = cov.time_to_loss(trace, t, dt=1.0)
+        print(
+            f"  t={t:2d}  best=bs{i}  rss={rss:6.1f} dBm"
+            f"  rate_factor={cov.rate_factor(rss):.2f}"
+            f"  time_to_loss={'inf' if np.isinf(ttl) else f'{ttl:.0f}'}"
+        )
+
+
+def headline_demo() -> None:
+    print("== headline: handover-aware dispatch vs static pinning ==")
+    sc = default_mobile_scenario(n_clients=4, n_steps=160, seed=0)
+    handover = run_mobile_scenario(sc, "handover")
+    static = run_mobile_scenario(sc, "static")
+    for name, tr in (("static pin", static), ("handover", handover)):
+        print(
+            f"  {name:11s} eff.acc={tr.mean_effective_accuracy():.4f}"
+            f"  realized_ratio={tr.realized_ratio():.3f}"
+            f"  handovers={tr.n_handovers()}"
+        )
+    gain = handover.mean_effective_accuracy() - static.mean_effective_accuracy()
+    print(f"  gain: +{gain:.4f} effective accuracy at equal offload budget")
+
+
+def in_flight_demo() -> None:
+    print("== in-flight semantics at the moment of handover ==")
+    sc = default_mobile_scenario(n_clients=4, n_steps=160, seed=0)
+    for mode in ("survive", "die", "stale"):
+        tr = run_mobile_scenario(sc, "handover", in_flight=mode)
+        cancelled = sum(
+            e.get("cancelled", 0) for e in tr.dispatcher["edges"].values()
+        )
+        stale = np.mean([t.mean_staleness for t in tr.telemetry])
+        print(
+            f"  {mode:8s} eff.acc={tr.mean_effective_accuracy():.4f}"
+            f"  cancelled={cancelled:3d}  mean_staleness={stale:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    motion_demo()
+    coverage_demo()
+    headline_demo()
+    in_flight_demo()

@@ -73,6 +73,7 @@ def _ensure_plugins() -> None:
     initialized — so there is no import cycle and importing repro.api stays
     cheap."""
     import repro.fleet.budget  # noqa: F401  (registers on import)
+    import repro.mobility.policy  # noqa: F401
     import repro.netsim.policy  # noqa: F401
     import repro.online.policy  # noqa: F401
     import repro.video.policy  # noqa: F401

@@ -62,6 +62,16 @@ class FleetBudget:
         redistribution (1.0 = jump straight to the target).
     reward_halflife : int
         Per-shard realized-reward EMA halflife, in recorded offloads.
+    congestion_weight : float
+        How strongly a shard's relative uplink congestion (EMA of realized
+        queue+transmit sojourns, ``record_congestion``) *discounts* its
+        redistribution score: tokens moved to a drowning shard's uplink
+        buy latency, not accuracy.  0 disables the signal.
+    staleness_weight : float
+        How strongly a shard's relative served-result staleness (EMA via
+        ``record_staleness``, frames) *boosts* its score: a shard living
+        off old edge results needs fresh offloads more than its reward EMA
+        alone says.  0 disables the signal.
     """
 
     def __init__(
@@ -75,6 +85,8 @@ class FleetBudget:
         min_share: float = 0.25,
         smooth: float = 0.5,
         reward_halflife: int = 32,
+        congestion_weight: float = 0.5,
+        staleness_weight: float = 0.5,
     ):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
@@ -91,10 +103,18 @@ class FleetBudget:
         )
         self.min_share = float(min_share)
         self.smooth = float(np.clip(smooth, 0.0, 1.0))
+        if congestion_weight < 0 or staleness_weight < 0:
+            raise ValueError("congestion_weight/staleness_weight must be >= 0")
         self._alpha = 1.0 - 0.5 ** (1.0 / max(int(reward_halflife), 1))
+        self.congestion_weight = float(congestion_weight)
+        self.staleness_weight = float(staleness_weight)
         self.shares = np.full(self.n_shards, 1.0 / self.n_shards)
         self._reward_ema = np.zeros(self.n_shards)
         self._reward_seen = np.zeros(self.n_shards, bool)
+        self._cong_ema = np.zeros(self.n_shards)
+        self._cong_seen = np.zeros(self.n_shards, bool)
+        self._stale_ema = np.zeros(self.n_shards)
+        self._stale_seen = np.zeros(self.n_shards, bool)
         self._last_redistribution: Optional[float] = None
         self.redistributions = 0
         self.buckets: List[TokenBucket] = [
@@ -132,6 +152,51 @@ class FleetBudget:
             self._reward_ema[shard] = float(score)
             self._reward_seen[shard] = True
 
+    def _ema(self, ema: np.ndarray, seen: np.ndarray, shard: int, v: float) -> None:
+        if seen[shard]:
+            ema[shard] += self._alpha * (float(v) - ema[shard])
+        else:
+            ema[shard] = float(v)
+            seen[shard] = True
+
+    def record_congestion(self, shard: int, sojourn: float) -> None:
+        """Account one realized uplink sojourn (queue + transmit, time
+        units) against the shard that paid it — wired by
+        :class:`~repro.fleet.runtime.FleetRuntime` from each admitted
+        offload's latency breakdown on link-fronted fleets."""
+        self._ema(self._cong_ema, self._cong_seen, shard, sojourn)
+
+    def record_staleness(self, shard: int, staleness: float) -> None:
+        """Account one served-result staleness sample (frames) against a
+        shard — wired from video-serving runtimes whose streams live off
+        propagated edge results."""
+        self._ema(self._stale_ema, self._stale_seen, shard, staleness)
+
+    def _signal_multiplier(self) -> np.ndarray:
+        """Congestion/staleness modifier on the reward scores: relative
+        (per-shard EMA over the seen-shard mean), so the signals are
+        scale-free — ``(1 + w_s * rel_stale) / (1 + w_c * rel_cong)``.
+        Shards with no samples sit at the neutral 1.0."""
+
+        def rel(ema: np.ndarray, seen: np.ndarray) -> np.ndarray:
+            if not seen.any():
+                return np.ones(self.n_shards)
+            mean = float(ema[seen].mean())
+            if mean <= 0.0:
+                return np.ones(self.n_shards)
+            return np.where(seen, ema / mean, 1.0)
+
+        out = np.ones(self.n_shards)
+        if self.staleness_weight > 0.0:
+            out = out * (
+                1.0 + self.staleness_weight * rel(self._stale_ema, self._stale_seen)
+            )
+        if self.congestion_weight > 0.0:
+            out = out / (
+                1.0 + self.congestion_weight * rel(self._cong_ema, self._cong_seen)
+            )
+        return out
+
     def maybe_redistribute(self, now: float) -> bool:
         """At the configured cadence, move shares toward the
         reward-proportional split (EMA-smoothed, floored at ``min_share`` of
@@ -151,6 +216,9 @@ class FleetBudget:
         )
         if rewards.sum() <= 0.0:
             return False
+        rewards = rewards * self._signal_multiplier()
+        if rewards.sum() <= 0.0:  # pragma: no cover - multiplier is positive
+            return False
         # every shard keeps the floor; only the remainder is contested, so
         # the floor survives normalization exactly and the sum stays 1
         floor = self.min_share / self.n_shards
@@ -169,6 +237,8 @@ class FleetBudget:
             "shares": [float(s) for s in self.shares],
             "levels": [float(b.level) for b in self.buckets],
             "reward_ema": [float(r) for r in self._reward_ema],
+            "congestion_ema": [float(c) for c in self._cong_ema],
+            "staleness_ema": [float(s) for s in self._stale_ema],
             "redistributions": self.redistributions,
         }
 

@@ -95,15 +95,32 @@ class CityScenario:
         return self.strong_ap - self.weak_ap
 
     def fleet_factory(self, shard: int) -> List[EdgeWorker]:
-        """A generous per-district fleet (ample capacity, latency only) so
-        admission almost never refuses and the experiment isolates
-        *decision* quality — the budget is the binding constraint."""
+        """A generous per-district fleet behind *real* netsim uplinks: a
+        seeded Gilbert–Elliott fading channel per edge, provisioned so the
+        whole district's budgeted offload rate transmits in a fraction of a
+        tick even through a fade — admission still almost never refuses,
+        so the experiment keeps isolating *decision* quality (the budget is
+        the binding constraint) while every offload now pays and reports
+        genuine per-frame transit."""
+        from repro.netsim import GilbertElliottLink
+
         per = -(-self.n_streams // self.n_shards)
+        bandwidth = 8.0 * max(per, 4)  # frames per tick at full signal
         return [
             EdgeWorker(
                 f"s{shard}e{i}",
                 capacity=max(per, 4),
                 latency=EdgeLatencyModel(base=1.0, jitter=0.05),
+                link=GilbertElliottLink(
+                    bandwidth=bandwidth,
+                    bad_bandwidth=bandwidth / 4.0,
+                    p_gb=0.05,
+                    p_bg=0.4,
+                    slot=1.0,
+                    seed=self.seed * 131 + 7 * shard + i,
+                ),
+                queue_depth=2 * max(per, 4),
+                frame_bits=1.0,
                 seed=self.seed + 7 * shard + i,
             )
             for i in range(2)

@@ -39,7 +39,7 @@ from repro.runtime.dispatch import (
 )
 from repro.runtime.edge import EdgeWorker
 from repro.runtime.session import OffloadSession, SessionTelemetry
-from repro.runtime.simulate import default_edge_fleet
+from repro.runtime.simulate import default_linked_fleet
 
 #: compact per-stream outcome codes for the array-valued step records
 OUTCOME_CODES: Tuple[str, ...] = (
@@ -170,8 +170,15 @@ class FleetRuntime:
         shard's stream count (2 ticks of its equal-split budget, >= 8).
     fleet_factory : callable or None
         ``shard_index -> list[EdgeWorker]`` building each shard's private
-        edge fleet; defaults to ``default_edge_fleet(edges_per_shard)``
-        with shard-prefixed names and shard-offset seeds.
+        edge fleet; defaults to ``default_linked_fleet(edges_per_shard)``
+        — the heterogeneous profiles behind real ``ConstantRateLink``
+        uplinks — with shard-prefixed names and shard-offset seeds, so
+        city runs genuinely pay (and report) transit per frame.
+    staleness_probe : callable or None
+        ``shard_index -> staleness (frames)`` sampled every tick into the
+        budget's redistribution signal (``FleetBudget.record_staleness``)
+        — the seam video-serving fleets feed their served-result age
+        through.  ``None`` leaves the staleness signal silent.
     """
 
     def __init__(
@@ -186,9 +193,12 @@ class FleetRuntime:
         redistribute_every: Optional[float] = None,
         min_share: float = 0.25,
         smooth: float = 0.5,
+        congestion_weight: float = 0.5,
+        staleness_weight: float = 0.5,
         bucket_depth: Optional[float] = None,
         edges_per_shard: int = 3,
         fleet_factory: Optional[Callable[[int], List[EdgeWorker]]] = None,
+        staleness_probe: Optional[Callable[[int], float]] = None,
         strategy: str = "least_loaded",
         on_saturation: str = "degrade",
         arrival_period: float = 1.0,
@@ -224,12 +234,16 @@ class FleetRuntime:
             redistribute_every=redistribute_every,
             min_share=min_share,
             smooth=smooth,
+            congestion_weight=congestion_weight,
+            staleness_weight=staleness_weight,
         )
         if fleet_factory is None:
             def fleet_factory(s: int) -> List[EdgeWorker]:
-                return default_edge_fleet(
-                    edges_per_shard, seed=seed + 1000 * s, prefix=f"s{s}_edge"
+                return default_linked_fleet(
+                    edges_per_shard, seed=seed + 1000 * s, prefix=f"s{s}_edge",
+                    queue_depth=max(64, streams_per_shard),
                 )
+        self.staleness_probe = staleness_probe
         # observability: the fleet stamps spans in simulated time — tick
         # spans on track 0, one session track per shard (1+s), edge tracks
         # blocked out per shard from 100 in steps of 100
@@ -317,9 +331,21 @@ class FleetRuntime:
                     # the engine's own reward score for the frame
                     self.budget.record_reward(sh.index, d.estimate)
                     sh.session.record_reward(d.estimate)
+                    bd = res.breakdown
+                    if bd is not None and (bd.queue or bd.transmit):
+                        # realized uplink sojourn — the congestion side of
+                        # the redistribution signal on link-fronted fleets
+                        self.budget.record_congestion(
+                            sh.index, bd.queue + bd.transmit
+                        )
         if prof is not None:
             prof.add("fleet.decide_dispatch", t0)
             t0 = prof.begin()
+        if self.staleness_probe is not None:
+            for sh in self.shards:
+                self.budget.record_staleness(
+                    sh.index, float(self.staleness_probe(sh.index))
+                )
         if self.budget.maybe_redistribute(now):
             for sh in self.shards:
                 sh.session.record_redistribution()

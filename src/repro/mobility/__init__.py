@@ -1,0 +1,63 @@
+"""Moving clients, coverage-dependent links, and mid-stream edge handover.
+
+The paper's deployment story — embedded devices *in motion* offloading
+detection to a fixed edge fleet — as a subsystem on the four documented
+seams: seeded mobility traces rolled out as one jitted ``lax.scan``
+(:mod:`repro.mobility.motion`), base-station placements with log-distance
+path loss mapped onto the existing netsim links plus a priced downlink
+(:mod:`repro.mobility.coverage`), hysteresis-triggered migration with
+configurable in-flight semantics (:mod:`repro.mobility.handover`), the
+``mobility_aware`` policy (registered in the ``repro.api`` registry), and
+the :class:`MobileRuntime` driver tying them to the shared manual clock
+(:mod:`repro.mobility.runtime`).  See docs/API.md "Mobility & handover".
+"""
+from repro.mobility.coverage import (
+    NO_SIGNAL_DBM,
+    BaseStation,
+    CoverageMap,
+    default_stations,
+    station_fleet,
+)
+from repro.mobility.handover import (
+    IN_FLIGHT,
+    HandoverController,
+    HandoverEvent,
+    PendingResult,
+    apply_in_flight,
+)
+from repro.mobility.motion import MODELS, MotionConfig, rollout, rollout_ref
+from repro.mobility.policy import MobilityAwarePolicy
+from repro.mobility.runtime import (
+    MODES,
+    MobileRuntime,
+    MobileScenario,
+    MobileStepRecord,
+    MobileTrace,
+    default_mobile_scenario,
+    run_mobile_scenario,
+)
+
+__all__ = [
+    "MODELS",
+    "MotionConfig",
+    "rollout",
+    "rollout_ref",
+    "NO_SIGNAL_DBM",
+    "BaseStation",
+    "CoverageMap",
+    "default_stations",
+    "station_fleet",
+    "IN_FLIGHT",
+    "HandoverController",
+    "HandoverEvent",
+    "PendingResult",
+    "apply_in_flight",
+    "MobilityAwarePolicy",
+    "MODES",
+    "MobileRuntime",
+    "MobileScenario",
+    "MobileStepRecord",
+    "MobileTrace",
+    "default_mobile_scenario",
+    "run_mobile_scenario",
+]

@@ -1,0 +1,198 @@
+"""Seeded 2-D client mobility traces.
+
+Two standard models, both drawing every random number up front from one
+``numpy`` generator so a trace is a pure function of ``(config, n_clients,
+n_steps, seed)``:
+
+- ``random_walk`` — heading follows a seeded Gaussian turn process; the
+  client advances ``speed * dt`` per step and is clamped to the area.
+- ``waypoint`` — the classic random-waypoint model: the client heads for a
+  seeded target at constant speed, switching to the next target the step
+  it would arrive.
+
+The rollout runs as ONE jitted ``jax.lax.scan`` over the T steps
+(:func:`rollout`), with a pure-Python/numpy reference oracle
+(:func:`rollout_ref`) that consumes the *same* pre-drawn arrays, mirroring
+the ``track_clip`` / ``track_clip_ref`` pairing in :mod:`repro.video.track`.
+Because all randomness is materialized before either path runs, the two
+agree to float32 rounding (tested), and two calls with equal seeds are
+bit-identical — the property the handover acceptance test pins.
+
+Positions are float32 ``(T, n_clients, 2)``; entry ``[t]`` is where each
+client is while frame ``t`` is captured (the initial placement is row 0;
+motion happens between frames).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MODELS = ("waypoint", "random_walk")
+
+
+@dataclass(frozen=True)
+class MotionConfig:
+    """Geometry + kinematics of a client population.
+
+    Parameters
+    ----------
+    model : str
+        ``"waypoint"`` or ``"random_walk"``.
+    area : (float, float)
+        Width/height of the rectangular world (same distance units as
+        base-station placements in :mod:`repro.mobility.coverage`).
+    speed : float
+        Distance covered per time unit (every client moves every step).
+    dt : float
+        Simulation step length in time units (one frame period).
+    turn_sigma : float
+        Random-walk only: stddev of the per-step heading change (radians).
+    """
+
+    model: str = "waypoint"
+    area: Tuple[float, float] = (1000.0, 1000.0)
+    speed: float = 12.0
+    dt: float = 1.0
+    turn_sigma: float = 0.35
+
+    def __post_init__(self) -> None:
+        if self.model not in MODELS:
+            raise KeyError(f"unknown motion model {self.model!r}; have {MODELS}")
+        if self.speed < 0 or self.dt <= 0:
+            raise ValueError(f"need speed >= 0 and dt > 0, got {self.speed}, {self.dt}")
+        if self.area[0] <= 0 or self.area[1] <= 0:
+            raise ValueError(f"area must be positive, got {self.area}")
+
+    def spec(self) -> Dict[str, float]:
+        return {
+            "model": self.model,
+            "area": list(self.area),
+            "speed": self.speed,
+            "dt": self.dt,
+            "turn_sigma": self.turn_sigma,
+        }
+
+
+def _draws(
+    config: MotionConfig, n_clients: int, n_steps: int, seed: int
+) -> Dict[str, np.ndarray]:
+    """Materialize every random number the rollout will consume — shared
+    verbatim by the scan and the reference, so the only difference between
+    the two paths is the arithmetic backend."""
+    if n_clients < 1 or n_steps < 1:
+        raise ValueError(f"need n_clients, n_steps >= 1, got {n_clients}, {n_steps}")
+    rng = np.random.default_rng(seed)
+    w, h = config.area
+    scale = np.array([w, h], np.float32)
+    out = {"pos0": (rng.random((n_clients, 2)).astype(np.float32)) * scale}
+    if config.model == "random_walk":
+        out["heading0"] = (rng.random(n_clients) * (2 * np.pi)).astype(np.float32)
+        out["turns"] = rng.normal(
+            0.0, config.turn_sigma, (n_steps - 1, n_clients)
+        ).astype(np.float32)
+    else:
+        # one fresh target per (step, client) is a strict upper bound on
+        # consumption: a client reaches at most one waypoint per step
+        out["targets"] = (
+            rng.random((n_steps, n_clients, 2)).astype(np.float32) * scale
+        )
+    return out
+
+
+@partial(jax.jit, static_argnames=("model",))
+def _rollout_scan(draws: Dict[str, jnp.ndarray], model: str, step_len, lim):
+    """One ``lax.scan`` over the T-1 motion steps; carries (pos[, heading
+    or waypoint index])."""
+    pos0 = draws["pos0"]
+    n = pos0.shape[0]
+    if model == "random_walk":
+        def step(carry, turn):
+            pos, heading = carry
+            heading = heading + turn
+            delta = step_len * jnp.stack(
+                [jnp.cos(heading), jnp.sin(heading)], axis=-1
+            )
+            pos = jnp.clip(pos + delta, 0.0, lim)
+            return (pos, heading), pos
+
+        (_, _), path = jax.lax.scan(
+            step, (pos0, draws["heading0"]), draws["turns"]
+        )
+    else:
+        targets = draws["targets"]
+        t_max = targets.shape[0] - 1
+        idx0 = jnp.zeros(n, jnp.int32)
+
+        def step(carry, _):
+            pos, idx = carry
+            tgt = targets[idx, jnp.arange(n)]
+            d = tgt - pos
+            dist = jnp.sqrt(jnp.sum(d * d, axis=-1))
+            reach = dist <= step_len
+            safe = jnp.maximum(dist, jnp.float32(1e-12))
+            pos = jnp.where(
+                reach[:, None], tgt, pos + d * (step_len / safe)[:, None]
+            )
+            idx = jnp.minimum(idx + reach.astype(jnp.int32), t_max)
+            return (pos, idx), pos
+
+        (_, _), path = jax.lax.scan(
+            step, (pos0, idx0), None, length=targets.shape[0] - 1
+        )
+    return jnp.concatenate([pos0[None], path], axis=0)
+
+
+def rollout(
+    config: MotionConfig, n_clients: int, n_steps: int, seed: int = 0
+) -> np.ndarray:
+    """Seeded positions ``(n_steps, n_clients, 2)`` via the jitted scan."""
+    draws = _draws(config, n_clients, n_steps, seed)
+    step_len = np.float32(config.speed * config.dt)
+    lim = np.asarray(config.area, np.float32)
+    return np.asarray(
+        _rollout_scan(
+            {k: jnp.asarray(v) for k, v in draws.items()},
+            config.model, step_len, lim,
+        )
+    )
+
+
+def rollout_ref(
+    config: MotionConfig, n_clients: int, n_steps: int, seed: int = 0
+) -> np.ndarray:
+    """Pure-Python/numpy oracle over the same pre-drawn arrays — the
+    reviewable spec the scan is tested against."""
+    draws = _draws(config, n_clients, n_steps, seed)
+    step_len = np.float32(config.speed * config.dt)
+    lim = np.asarray(config.area, np.float32)
+    pos = draws["pos0"].copy()
+    path = [pos.copy()]
+    if config.model == "random_walk":
+        heading = draws["heading0"].copy()
+        for t in range(n_steps - 1):
+            heading = heading + draws["turns"][t]
+            delta = step_len * np.stack(
+                [np.cos(heading), np.sin(heading)], axis=-1
+            ).astype(np.float32)
+            pos = np.clip(pos + delta, 0.0, lim).astype(np.float32)
+            path.append(pos.copy())
+    else:
+        targets = draws["targets"]
+        t_max = targets.shape[0] - 1
+        idx = np.zeros(n_clients, np.int32)
+        for t in range(n_steps - 1):
+            tgt = targets[idx, np.arange(n_clients)]
+            d = tgt - pos
+            dist = np.sqrt(np.sum(d * d, axis=-1), dtype=np.float32)
+            reach = dist <= step_len
+            safe = np.maximum(dist, np.float32(1e-12))
+            stepped = (pos + d * (step_len / safe)[:, None]).astype(np.float32)
+            pos = np.where(reach[:, None], tgt, stepped)
+            idx = np.minimum(idx + reach.astype(np.int32), t_max)
+            path.append(pos.copy())
+    return np.stack(path, axis=0)

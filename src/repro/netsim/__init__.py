@@ -30,7 +30,7 @@ from repro.netsim.policy import (
     value_iteration_ref,
     value_iteration_sweep,
 )
-from repro.netsim.queue import TransmittedFrame, UplinkQueue
+from repro.netsim.queue import DownlinkQueue, TransmittedFrame, UplinkQueue
 
 __all__ = [
     "NetworkLink",
@@ -40,6 +40,7 @@ __all__ = [
     "CHANNEL_GOOD",
     "CHANNEL_BAD",
     "UplinkQueue",
+    "DownlinkQueue",
     "TransmittedFrame",
     "QueueAwarePolicy",
     "ValueIterationPolicy",

@@ -153,3 +153,27 @@ class UplinkQueue:
             "dropped": self.dropped,
             "occupancy": len(self._pending),
         }
+
+
+class DownlinkQueue(UplinkQueue):
+    """The edge→device **return** channel: detections coming back also pay
+    transit before they count.
+
+    Mechanically identical to :class:`UplinkQueue` (one transmitter, FIFO,
+    bounded, deterministic enqueue-time schedules, conservative
+    delivered+dropped==enqueued accounting) — the subclass exists so
+    topologies read correctly and so result frames get their own default
+    size: a detection list is much smaller than the image that produced it,
+    so ``frame_bits`` here defaults to a quarter of the uplink convention.
+
+    One semantic difference of *use*, not mechanics: results are enqueued
+    at their **service-completion** time, which for concurrently admitted
+    offloads need not be monotone in admission order.  The queue serializes
+    them in enqueue-call order (``t_start = max(ready, busy_until)``) — the
+    return channel is one radio, and the schedule stays deterministic
+    because :class:`~repro.runtime.edge.EdgeWorker` enqueues at admission
+    time, in admission order.
+    """
+
+    def __init__(self, link: NetworkLink, *, depth: int = 32, frame_bits: float = 0.25):
+        super().__init__(link, depth=depth, frame_bits=frame_bits)

@@ -150,9 +150,27 @@ class MultiEdgeDispatcher:
         # once try_admit polls completions at dispatch time)
         return order + [i for i in range(n) if w[i] <= 0.0]
 
-    def dispatch(self, now: float, step: int, estimate: float) -> DispatchResult:
+    def dispatch(
+        self,
+        now: float,
+        step: int,
+        estimate: float,
+        *,
+        prefer: Optional[int] = None,
+        pin: bool = False,
+        size_bits: Optional[float] = None,
+    ) -> DispatchResult:
         """Route one accepted offload; on fleet saturation apply the
-        drop-or-degrade policy."""
+        drop-or-degrade policy.
+
+        ``prefer`` (an edge index) probes that edge first and only then
+        falls back to the strategy's order — the seam mobility-aware
+        dispatchers use to favor a stream's serving base station while
+        keeping the fleet as backup.  ``pin=True`` hardens that to *only*
+        that edge (a mobile client's single radio talks to one station;
+        refusal degrades/drops rather than teleporting the frame).
+        ``size_bits`` overrides the frame's size on the uplink
+        (coverage-dependent links price a far client's frame higher)."""
         prof = self._profiler
         if prof is None:
             self.poll(now)
@@ -161,12 +179,22 @@ class MultiEdgeDispatcher:
             self.poll(now)
             prof.add("dispatch.poll", t0)
             t0 = prof.begin()
+        if pin and prefer is None:
+            raise ValueError("pin=True needs prefer=<edge index>")
         order = self._probe_order(estimate)
+        if prefer is not None:
+            if not 0 <= prefer < len(self.edges):
+                raise IndexError(
+                    f"prefer={prefer} outside fleet of {len(self.edges)}"
+                )
+            order = [prefer] if pin else (
+                [prefer] + [i for i in order if i != prefer]
+            )
         if prof is not None:
             prof.add("dispatch.probe_order", t0)
             t0 = prof.begin()
         for i in order:
-            lat = self.edges[i].try_admit(now, step, estimate)
+            lat = self.edges[i].try_admit(now, step, estimate, size_bits)
             if lat is not None:
                 if prof is not None:
                     prof.add("dispatch.admit", t0)

@@ -60,18 +60,26 @@ class EdgeLatencyModel:
 @dataclass(frozen=True)
 class LatencyBreakdown:
     """Where one offload's latency went: uplink queue wait, transmission,
-    and edge service.  Link-free edges report pure service."""
+    edge service, and (on downlink-fronted edges) the return transit of the
+    result — the detections also pay transmission before they count.
+    Link-free edges report pure service."""
 
     queue: float
     transmit: float
     service: float
+    downlink: float = 0.0
 
     @property
     def total(self) -> float:
-        return self.queue + self.transmit + self.service
+        return self.queue + self.transmit + self.service + self.downlink
 
     def as_dict(self) -> Dict[str, float]:
-        return {"queue": self.queue, "transmit": self.transmit, "service": self.service}
+        return {
+            "queue": self.queue,
+            "transmit": self.transmit,
+            "service": self.service,
+            "downlink": self.downlink,
+        }
 
 
 @dataclass(frozen=True)
@@ -111,6 +119,19 @@ class EdgeWorker:
     frame_bits : float
         Default offloaded-frame size on the link (``try_admit`` may
         override per frame).
+    downlink : repro.netsim.NetworkLink or None
+        Optional edge→device **return** channel.  When set, each completed
+        offload's result (``result_bits``) traverses a bounded FIFO
+        :class:`repro.netsim.DownlinkQueue` before the device counts it:
+        the returned latency additionally includes the downlink sojourn
+        (``breakdown.downlink``), and admission pre-checks the downlink
+        queue the same way it pre-checks the uplink.
+    downlink_depth : int
+        Downlink queue bound (results queued-or-transmitting) when
+        ``downlink`` is set.
+    result_bits : float
+        Returned-result size on the downlink (detections are far smaller
+        than the frames that produced them).
     seed : int
         Seeds the jitter stream; two workers with equal config + seed are
         step-for-step identical.
@@ -127,6 +148,9 @@ class EdgeWorker:
         link: Optional["NetworkLink"] = None,
         queue_depth: int = 16,
         frame_bits: float = 1.0,
+        downlink: Optional["NetworkLink"] = None,
+        downlink_depth: int = 32,
+        result_bits: float = 0.25,
         seed: int = 0,
     ):
         if capacity < 1:
@@ -142,6 +166,14 @@ class EdgeWorker:
             )
         else:
             self.uplink = None
+        if downlink is not None:
+            from repro.netsim.queue import DownlinkQueue
+
+            self.downlink: Optional[DownlinkQueue] = DownlinkQueue(
+                downlink, depth=downlink_depth, frame_bits=result_bits
+            )
+        else:
+            self.downlink = None
         self.last_breakdown: Optional[LatencyBreakdown] = None
         self._tracer: Optional[Any] = None
         self._tid = 0
@@ -153,6 +185,7 @@ class EdgeWorker:
         self.completed: List[CompletedJob] = []
         self.accepted = 0
         self.rejected = 0
+        self.cancelled = 0
         self._bucket: Optional[TokenBucket] = (
             TokenBucket(
                 rate=float(rate),
@@ -208,6 +241,8 @@ class EdgeWorker:
         self._advance(now)
         if self.uplink is not None:
             self.uplink.poll(self._now)
+        if self.downlink is not None:
+            self.downlink.poll(self._now)
         done: List[CompletedJob] = []
         while self._inflight and self._inflight[0][0] <= self._now:
             t_done, step, t_admit = heapq.heappop(self._inflight)
@@ -240,6 +275,8 @@ class EdgeWorker:
         service = self.latency.base + self.latency.per_inflight * len(self._inflight)
         if self.uplink is not None:
             service += self.uplink.predicted_sojourn(self._now)
+        if self.downlink is not None:
+            service += self.downlink.predicted_sojourn(self._now)
         return service
 
     def predicted_uplink_delay(self, now: float) -> float:
@@ -270,16 +307,22 @@ class EdgeWorker:
     ) -> Optional[float]:
         """Admit one offload; returns its latency, or ``None`` when the edge
         refuses (capacity full, the rate limiter withholds a token, or the
-        uplink queue is full).  The estimate is recorded on the trace, not
-        used for admission.  On success ``last_breakdown`` holds the
-        queue/transmit/service decomposition of the returned latency."""
+        uplink/downlink queue is full).  The estimate is recorded on the
+        trace, not used for admission.  On success ``last_breakdown`` holds
+        the queue/transmit/service(/downlink) decomposition of the returned
+        latency — on downlink-fronted edges the result's return transit is
+        part of the latency, because a detection the device has not received
+        yet serves nothing."""
         self.poll(now)
         if len(self._inflight) >= self.capacity:
             self.rejected += 1
             return None
-        # pre-check the uplink BEFORE the rate limiter: a full queue must
+        # pre-check the queues BEFORE the rate limiter: a full queue must
         # not burn a token on a frame it is about to refuse
         if self.uplink is not None and self.uplink.full(self._now):
+            self.rejected += 1
+            return None
+        if self.downlink is not None and self.downlink.full(self._now):
             self.rejected += 1
             return None
         if self._bucket is not None and not self._bucket.try_take():
@@ -291,17 +334,30 @@ class EdgeWorker:
                 self.rejected += 1
                 return None
             service = self.latency.sample(len(self._inflight), self._rng)
-            self.last_breakdown = LatencyBreakdown(
-                queue=frame.queue_delay,
-                transmit=frame.transmit_delay,
-                service=service,
-            )
-            lat = (frame.t_delivered - self._now) + service
+            queue_delay, transmit_delay = frame.queue_delay, frame.transmit_delay
+            t_ready = frame.t_delivered + service
         else:
-            lat = self.latency.sample(len(self._inflight), self._rng)
-            self.last_breakdown = LatencyBreakdown(
-                queue=0.0, transmit=0.0, service=lat
-            )
+            service = self.latency.sample(len(self._inflight), self._rng)
+            queue_delay = transmit_delay = 0.0
+            t_ready = self._now + service
+        downlink_delay = 0.0
+        if self.downlink is not None:
+            # the whole schedule is known at admit time (deterministic
+            # links), so the result's return leg is priced now: it enters
+            # the downlink when service completes and pays FIFO transit
+            result = self.downlink.enqueue(t_ready, int(step))
+            if result is None:  # unreachable: fullness checked above
+                self.rejected += 1
+                return None
+            downlink_delay = result.sojourn
+            t_ready = result.t_delivered
+        self.last_breakdown = LatencyBreakdown(
+            queue=queue_delay,
+            transmit=transmit_delay,
+            service=service,
+            downlink=downlink_delay,
+        )
+        lat = t_ready - self._now
         heapq.heappush(self._inflight, (self._now + lat, int(step), self._now))
         self.accepted += 1
         if self._tracer is not None:
@@ -319,10 +375,29 @@ class EdgeWorker:
             )
             tq = t0 + bd.queue
             tt = tq + bd.transmit
+            ts = tt + bd.service
             tr.add_async_span("queue", t0, tq, id=jid, tid=self._tid)
             tr.add_async_span("transmit", tq, tt, id=jid, tid=self._tid)
-            tr.add_async_span("service", tt, t1, id=jid, tid=self._tid)
+            tr.add_async_span("service", tt, ts, id=jid, tid=self._tid)
+            if bd.downlink > 0.0:
+                tr.add_async_span("downlink", ts, t1, id=jid, tid=self._tid)
         return lat
+
+    def cancel_steps(self, steps: "set[int]") -> int:
+        """Drop the in-flight offloads whose step ids are in ``steps`` —
+        the *die* in-flight semantics of a mid-stream edge handover: results
+        still being computed for (or transiting back to) a client that left
+        this edge's coverage are abandoned, never delivered.  Returns the
+        number cancelled.  Queue occupancy is left untouched: the frames
+        already crossed (or are crossing) the radio — only the delivery is
+        suppressed."""
+        keep = [e for e in self._inflight if e[1] not in steps]
+        n = len(self._inflight) - len(keep)
+        if n:
+            self._inflight = keep
+            heapq.heapify(self._inflight)
+            self.cancelled += n
+        return n
 
     # ----------------------------------------------------------------- stats
 
@@ -334,6 +409,10 @@ class EdgeWorker:
             "completed": len(self.completed),
             "inflight": len(self._inflight),
         }
+        if self.cancelled:
+            out["cancelled"] = self.cancelled
         if self.uplink is not None:
             out["uplink"] = self.uplink.stats()
+        if self.downlink is not None:
+            out["downlink"] = self.downlink.stats()
         return out

@@ -59,7 +59,11 @@ class SessionTelemetry:
     (``record_update``).  The fleet counters (``budget_share``/
     ``budget_redistributions``) sit behind ``include_fleet`` the same way:
     zero unless a fleet runtime records the stream's coordinated budget
-    state (``record_budget_share``/``record_redistribution``)."""
+    state (``record_budget_share``/``record_redistribution``).  The
+    mobility counters (``handovers``/``mean_coverage_dbm``) follow suit
+    behind ``include_mobility``: zero unless a mobile runtime records edge
+    migrations (``record_handover``) or received-signal-strength samples
+    (``record_coverage``)."""
 
     processed: int
     offloaded: int
@@ -81,12 +85,16 @@ class SessionTelemetry:
     online_updates: int = 0
     budget_share: float = 0.0
     budget_redistributions: int = 0
+    handovers: int = 0
+    coverage_samples: int = 0
+    mean_coverage_dbm: float = 0.0
 
     def as_dict(
         self,
         include_video: bool = False,
         include_online: bool = False,
         include_fleet: bool = False,
+        include_mobility: bool = False,
     ) -> Dict[str, Any]:
         out = {
             "processed": self.processed,
@@ -123,6 +131,14 @@ class SessionTelemetry:
                 {
                     "budget_share": self.budget_share,
                     "budget_redistributions": self.budget_redistributions,
+                }
+            )
+        if include_mobility:
+            out.update(
+                {
+                    "handovers": self.handovers,
+                    "coverage_samples": self.coverage_samples,
+                    "mean_coverage_dbm": self.mean_coverage_dbm,
                 }
             )
         return out
@@ -164,6 +180,12 @@ class OffloadSession:
     scene_change : callable or None
         Zero-arg probe of the stream's scene-change score in [0, 1],
         forwarded to policies that declare it (``keyframe``).
+    coverage_ttl : callable or None
+        Zero-arg probe of the stream's predicted time-to-coverage-loss
+        (sim time units until the serving base station's signal drops
+        below the usable floor, ``inf`` when not leaving coverage),
+        forwarded to policies that declare it (``mobility_aware``); wired
+        by the mobile runtime from its motion trace + coverage map.
     tracker : repro.video.track.VideoTracker or None
         Optional temporal state carried with the stream — sessions opened
         on video streams hold the tracker that ages/propagates stale edge
@@ -204,6 +226,7 @@ class OffloadSession:
         state_probe: Optional[Callable[[], tuple]] = None,
         staleness: Optional[Callable[[], float]] = None,
         scene_change: Optional[Callable[[], float]] = None,
+        coverage_ttl: Optional[Callable[[], float]] = None,
         tracker: Optional[Any] = None,
         obs: Optional[Any] = None,
         name: Optional[str] = None,
@@ -223,6 +246,7 @@ class OffloadSession:
             "state_probe": state_probe,
             "staleness": staleness,
             "scene_change": scene_change,
+            "coverage_ttl": coverage_ttl,
         }
         kwargs.update(
             {k: v for k, v in context.items() if v is not None and k in accepted}
@@ -325,6 +349,22 @@ class OffloadSession:
         self._budget_redistributions = counter(
             "repro_budget_redistributions_total", labels,
             help="fleet budget redistributions applied",
+        )
+        self._handovers = counter(
+            "repro_handovers_total", labels,
+            help="mid-stream edge handovers executed",
+        )
+        self._coverage_sum = counter(
+            "repro_coverage_dbm_sum_total", labels,
+            help="summed received signal strength samples (dBm)",
+        )
+        self._coverage_samples = counter(
+            "repro_coverage_samples_total", labels,
+            help="received signal strength samples",
+        )
+        self._coverage_dbm = gauge(
+            "repro_coverage_dbm", labels,
+            help="latest received signal strength from the serving edge (dBm)",
         )
         # live views with zero hot-path cost: evaluated only at collection
         gauge(
@@ -601,6 +641,17 @@ class OffloadSession:
         """Account one fleet budget redistribution applied to this stream."""
         self._budget_redistributions.inc()
 
+    def record_handover(self) -> None:
+        """Account one mid-stream edge migration (serving edge changed)."""
+        self._handovers.inc()
+
+    def record_coverage(self, dbm: float) -> None:
+        """Account one received-signal-strength sample from the stream's
+        serving base station (dBm; see :mod:`repro.mobility.coverage`)."""
+        self._coverage_sum.inc(float(dbm))
+        self._coverage_samples.inc()
+        self._coverage_dbm.set(float(dbm))
+
     # ------------------------------------------------------------- telemetry
 
     @property
@@ -641,4 +692,10 @@ class OffloadSession:
             online_updates=self._online_updates.value,
             budget_share=float(self._budget_share.value),
             budget_redistributions=self._budget_redistributions.value,
+            handovers=self._handovers.value,
+            coverage_samples=self._coverage_samples.value,
+            mean_coverage_dbm=(
+                self._coverage_sum.value / self._coverage_samples.value
+                if self._coverage_samples.value else 0.0
+            ),
         )

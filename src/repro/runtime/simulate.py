@@ -37,10 +37,11 @@ class StepRecord:
     """One frame's full serve-time story, in arrival order.
 
     For offloaded frames the latency decomposes exactly:
-    ``latency == queue_delay + transmit_delay + service_delay`` (the uplink
-    queue wait, the transmission over the link, and the edge service time —
-    the first two are 0 on link-free edges).  Non-offloaded frames carry
-    ``None`` for all three.
+    ``latency == queue_delay + transmit_delay + service_delay +
+    downlink_delay`` (the uplink queue wait, the transmission over the
+    link, the edge service time, and the result's return transit — the
+    first two are 0 on link-free edges, the last is 0 on edges without a
+    downlink).  Non-offloaded frames carry ``None`` for all four.
 
     Video streams (``repro.video``) additionally stamp temporal fields:
     ``source`` is what was actually served for the frame (``"weak"`` or
@@ -60,6 +61,7 @@ class StepRecord:
     queue_delay: Optional[float] = None
     transmit_delay: Optional[float] = None
     service_delay: Optional[float] = None
+    downlink_delay: Optional[float] = None
     source: Optional[str] = None
     staleness: Optional[float] = None
     effective_accuracy: Optional[float] = None
@@ -77,6 +79,7 @@ class StepRecord:
             "queue_delay": self.queue_delay,
             "transmit_delay": self.transmit_delay,
             "service_delay": self.service_delay,
+            "downlink_delay": self.downlink_delay,
             "source": self.source,
             "staleness": self.staleness,
             "effective_accuracy": self.effective_accuracy,
@@ -123,17 +126,25 @@ class StreamTrace:
         }
 
     def latency_decomposition(self) -> Optional[Dict[str, float]]:
-        """Mean queue/transmit/service components over the offloaded frames
-        (``None`` when nothing was offloaded)."""
+        """Mean queue/transmit/service/downlink components over the
+        offloaded frames (``None`` when nothing was offloaded)."""
         rows = [
-            (r.queue_delay, r.transmit_delay, r.service_delay)
+            (
+                r.queue_delay,
+                r.transmit_delay,
+                r.service_delay,
+                r.downlink_delay if r.downlink_delay is not None else 0.0,
+            )
             for r in self.records
             if r.queue_delay is not None
         ]
         if not rows:
             return None
-        q, t, s = (float(np.mean(col)) for col in zip(*rows))
-        return {"queue": q, "transmit": t, "service": s, "total": q + t + s}
+        q, t, s, d = (float(np.mean(col)) for col in zip(*rows))
+        return {
+            "queue": q, "transmit": t, "service": s, "downlink": d,
+            "total": q + t + s + d,
+        }
 
     def summary(self) -> Dict[str, Any]:
         lats = [r.latency for r in self.records if r.latency is not None]
@@ -208,6 +219,58 @@ def default_congested_fleet(
         )
         for i in range(n)
     ]
+
+
+def default_linked_fleet(
+    n: int = 3,
+    seed: int = 0,
+    *,
+    transmit_time: float = 0.08,
+    queue_depth: int = 64,
+    fading: bool = False,
+    p_gb: float = 0.05,
+    p_bg: float = 0.4,
+    bad_slowdown: float = 3.0,
+    prefix: str = "edge",
+) -> List[EdgeWorker]:
+    """The heterogeneous ``default_edge_fleet`` profiles with *real* netsim
+    uplinks in front of them: a fast ``ConstantRateLink`` per edge (one
+    frame in ``transmit_time`` time units) or, with ``fading=True``, a
+    seeded Gilbert–Elliott channel that slows to ``bad_slowdown``× in
+    fades.  Unlike ``default_congested_fleet`` the link is provisioned as
+    the *minor* cost — service still dominates — so scenarios built on the
+    latency-only fleet keep their character while every frame genuinely
+    pays transit (the fleet city scenario runs on this)."""
+    from repro.netsim import ConstantRateLink, GilbertElliottLink
+
+    fleet = default_edge_fleet(n, seed, prefix=prefix)
+    out: List[EdgeWorker] = []
+    for i, e in enumerate(fleet):
+        if fading:
+            link = GilbertElliottLink(
+                bandwidth=1.0 / transmit_time,
+                bad_bandwidth=1.0 / (transmit_time * bad_slowdown),
+                p_gb=p_gb,
+                p_bg=p_bg,
+                slot=1.0,
+                seed=seed * 211 + i,
+            )
+        else:
+            link = ConstantRateLink(1.0 / transmit_time)
+        out.append(
+            EdgeWorker(
+                e.name,
+                capacity=e.capacity,
+                rate=e._bucket.rate if e._bucket is not None else None,
+                burst=e._bucket.depth if e._bucket is not None else 1.0,
+                latency=e.latency,
+                link=link,
+                queue_depth=queue_depth,
+                frame_bits=1.0,
+                seed=seed + i,
+            )
+        )
+    return out
 
 
 class OffloadRuntime:
@@ -288,6 +351,7 @@ class OffloadRuntime:
         telemetry_window: int = 64,
         staleness: Optional[Any] = None,
         scene_change: Optional[Any] = None,
+        coverage_ttl: Optional[Any] = None,
         tracker: Optional[Any] = None,
         name: Optional[str] = None,
         tid: int = 1,
@@ -315,6 +379,7 @@ class OffloadRuntime:
             state_probe=self._state_probe,
             staleness=staleness,
             scene_change=scene_change,
+            coverage_ttl=coverage_ttl,
             tracker=tracker,
             obs=self.obs,
             name=name,
@@ -383,6 +448,7 @@ class OffloadRuntime:
                         queue_delay=bd.queue if bd is not None else None,
                         transmit_delay=bd.transmit if bd is not None else None,
                         service_delay=bd.service if bd is not None else None,
+                        downlink_delay=bd.downlink if bd is not None else None,
                     )
                 )
 

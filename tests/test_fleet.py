@@ -82,6 +82,60 @@ def test_fleet_budget_min_share_floor():
     assert budget.shares[0] == max(budget.shares)
 
 
+def test_fleet_budget_congestion_only_shock_shifts_shares():
+    """Equal realized rewards everywhere; shard 0's uplink alone drowns.
+    The congestion discount must move budget *away* from shard 0 even
+    though the reward signal is flat — tokens sent into a saturated uplink
+    buy queueing delay, not accuracy."""
+    clock = ManualClock()
+    budget = FleetBudget(
+        16.0, 4, clock=clock, redistribute_every=1.0, smooth=1.0,
+        congestion_weight=0.5, staleness_weight=0.5,
+    )
+    for shard in range(4):
+        for _ in range(8):
+            budget.record_reward(shard, 0.5)  # identical reward signal
+            budget.record_congestion(shard, 8.0 if shard == 0 else 0.5)
+    budget.maybe_redistribute(clock())
+    clock.advance(1.0)
+    assert budget.maybe_redistribute(clock())
+    assert np.isclose(budget.shares.sum(), 1.0)
+    assert budget.shares[0] < 0.25  # below the equal split
+    assert all(budget.shares[s] > budget.shares[0] for s in range(1, 4))
+    # uncongested shards stay symmetric with each other
+    assert np.allclose(budget.shares[1:], budget.shares[1])
+    assert np.isclose(sum(b.rate for b in budget.buckets), 16.0)
+    # with the signal disabled the same shock changes nothing
+    flat = FleetBudget(
+        16.0, 4, clock=ManualClock(), redistribute_every=1.0, smooth=1.0,
+        congestion_weight=0.0, staleness_weight=0.0,
+    )
+    for shard in range(4):
+        for _ in range(8):
+            flat.record_reward(shard, 0.5)
+            flat.record_congestion(shard, 8.0 if shard == 0 else 0.5)
+    flat.maybe_redistribute(0.0)
+    assert flat.maybe_redistribute(1.0)
+    assert np.allclose(flat.shares, 0.25)
+
+
+def test_fleet_budget_staleness_boosts_starved_shard():
+    clock = ManualClock()
+    budget = FleetBudget(
+        16.0, 4, clock=clock, redistribute_every=1.0, smooth=1.0,
+        congestion_weight=0.0, staleness_weight=0.5,
+    )
+    for shard in range(4):
+        for _ in range(8):
+            budget.record_reward(shard, 0.5)
+            budget.record_staleness(shard, 9.0 if shard == 2 else 1.0)
+    budget.maybe_redistribute(clock())
+    clock.advance(1.0)
+    assert budget.maybe_redistribute(clock())
+    assert budget.shares[2] == max(budget.shares) and budget.shares[2] > 0.25
+    assert np.isclose(budget.shares.sum(), 1.0)
+
+
 def test_fleet_budget_static_never_redistributes():
     clock = ManualClock()
     budget = FleetBudget(8.0, 4, clock=clock, redistribute_every=None)

@@ -1,0 +1,435 @@
+"""repro.mobility: seeded motion traces (scan ≡ reference, bit-identical
+reruns), coverage/path-loss mapping, downlink conservation, handover
+hysteresis + in-flight semantics, the mobility_aware policy, and the
+headline: handover-aware dispatch beats static pinning in mean effective
+accuracy at equal realized offload ratio."""
+import numpy as np
+import pytest
+
+from repro.api import MLPRewardModel, OffloadEngine, list_policies, make_policy
+from repro.core import EstimatorConfig
+from repro.mobility import (
+    BaseStation,
+    CoverageMap,
+    HandoverController,
+    MobileRuntime,
+    MotionConfig,
+    PendingResult,
+    apply_in_flight,
+    default_mobile_scenario,
+    default_stations,
+    rollout,
+    rollout_ref,
+    run_mobile_scenario,
+    station_fleet,
+)
+from repro.netsim import ConstantRateLink, DownlinkQueue
+from repro.runtime import (
+    OUTCOME_DEGRADED,
+    OUTCOME_OFFLOADED,
+    EdgeLatencyModel,
+    EdgeWorker,
+    MultiEdgeDispatcher,
+)
+from repro.runtime.session import OffloadSession
+
+
+def fitted_engine(ratio=0.5, policy=None, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (256, 8)).astype(np.float32)
+    rewards = 2.0 * x[:, 0] + 0.3 * rng.normal(size=256)
+    eng = OffloadEngine(
+        reward_model=MLPRewardModel(
+            config=EstimatorConfig(hidden=(16,), epochs=10, batch_size=64)
+        ),
+        ratio=ratio,
+    )
+    eng.fit(features=x, rewards=rewards)
+    if policy is not None:
+        eng = eng.with_policy(policy, ratio=ratio)
+    return eng
+
+
+# ------------------------------------------------------------------ motion
+
+
+@pytest.mark.parametrize("model", ["waypoint", "random_walk"])
+def test_motion_scan_matches_reference(model):
+    cfg = MotionConfig(model=model, area=(800.0, 400.0), speed=9.0)
+    scan = rollout(cfg, 6, 50, seed=11)
+    ref = rollout_ref(cfg, 6, 50, seed=11)
+    assert scan.shape == ref.shape == (50, 6, 2)
+    np.testing.assert_allclose(scan, ref, atol=1e-3)
+    # positions stay inside the area
+    assert scan[..., 0].min() >= 0 and scan[..., 0].max() <= 800.0
+    assert scan[..., 1].min() >= 0 and scan[..., 1].max() <= 400.0
+
+
+@pytest.mark.parametrize("model", ["waypoint", "random_walk"])
+def test_motion_trace_bit_identical_under_seed(model):
+    cfg = MotionConfig(model=model)
+    a = rollout(cfg, 4, 64, seed=7)
+    b = rollout(cfg, 4, 64, seed=7)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, rollout(cfg, 4, 64, seed=8))
+
+
+def test_motion_validation():
+    with pytest.raises(KeyError):
+        MotionConfig(model="teleport")
+    with pytest.raises(ValueError):
+        MotionConfig(dt=0.0)
+    with pytest.raises(ValueError):
+        rollout(MotionConfig(), 0, 10)
+
+
+# ---------------------------------------------------------------- coverage
+
+
+def test_path_loss_monotone_and_rate_factor():
+    st = BaseStation("bs", x=0.0, y=0.0)
+    d = np.array([[1.0, 0.0], [10.0, 0.0], [100.0, 0.0], [1000.0, 0.0]])
+    rss = st.rss_dbm(d)
+    assert np.all(np.diff(rss) < 0)  # farther is strictly weaker
+    cov = CoverageMap([st], floor_dbm=-80.0, full_dbm=-50.0)
+    assert cov.rate_factor(-40.0) == 1.0       # above full: clamp
+    assert cov.rate_factor(-95.0) == cov.min_rate_factor
+    mid = cov.rate_factor(-65.0)
+    assert cov.min_rate_factor < mid < 1.0
+    assert cov.rate_factor(-60.0) > mid        # stronger signal, more rate
+
+
+def test_time_to_coverage_loss():
+    cov = CoverageMap(
+        [BaseStation("bs", x=0.0, y=0.0)], floor_dbm=-70.0, full_dbm=-50.0
+    )
+    # walk straight away from the station; signal drops below floor en route
+    trace = np.stack(
+        [np.linspace(1.0, 2000.0, 40), np.zeros(40)], axis=-1
+    )
+    ttl0 = cov.time_to_loss(trace, 0, dt=1.0)
+    assert np.isfinite(ttl0) and ttl0 > 0
+    # from a later step the loss is closer
+    assert cov.time_to_loss(trace, 10, dt=1.0) < ttl0
+    assert cov.time_to_loss(trace, len(trace) - 1, dt=1.0) == 0.0
+    # near the station, coverage holds through the horizon
+    home = np.ones((40, 2))
+    assert cov.time_to_loss(home, 0, dt=1.0) == float("inf")
+
+
+# ---------------------------------------------------------------- downlink
+
+
+def test_downlink_queue_conservation():
+    q = DownlinkQueue(ConstantRateLink(2.0), depth=4, frame_bits=1.0)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(200):
+        q.enqueue(t, i, size_bits=float(rng.uniform(0.2, 3.0)))
+        t += float(rng.uniform(0.0, 0.6))
+    q.poll(t + 1e9)
+    s = q.stats()
+    # every offered frame is exactly one of accepted (-> delivered once
+    # fully drained) or dropped at the bounded queue
+    assert s["dropped"] > 0
+    assert s["enqueued"] + s["dropped"] == 200
+    assert s["delivered"] == s["enqueued"]
+    assert s["occupancy"] == 0
+
+
+def test_edge_downlink_prices_return_transit():
+    up = ConstantRateLink(10.0)
+    down = ConstantRateLink(2.0)
+    e = EdgeWorker(
+        "e", capacity=4,
+        latency=EdgeLatencyModel(base=1.0, per_inflight=0.0, jitter=0.0),
+        link=up, queue_depth=8, frame_bits=1.0,
+        downlink=down, result_bits=1.0, seed=0,
+    )
+    lat = e.try_admit(0.0, 0, 0.5)
+    bd = e.last_breakdown
+    assert lat is not None and bd is not None
+    assert bd.downlink == pytest.approx(0.5)   # 1 bit over rate-2 downlink
+    assert lat == pytest.approx(bd.total)
+    assert bd.total == pytest.approx(
+        bd.queue + bd.transmit + bd.service + bd.downlink
+    )
+    assert "downlink" in e.stats()
+
+
+def test_edge_cancel_steps_frees_inflight():
+    e = EdgeWorker(
+        "e", capacity=4,
+        latency=EdgeLatencyModel(base=5.0, per_inflight=0.0, jitter=0.0),
+        seed=0,
+    )
+    for s in range(3):
+        assert e.try_admit(0.0, s, 0.5) is not None
+    assert e.inflight == 3
+    assert e.cancel_steps({0, 2}) == 2
+    assert e.inflight == 1 and e.cancelled == 2
+    e.poll(100.0)
+    assert len(e.completed) == 1  # cancelled jobs never complete
+
+
+# -------------------------------------------------------- dispatch prefer/pin
+
+
+def test_dispatch_prefer_and_pin():
+    edges = [
+        EdgeWorker(f"e{i}", capacity=1,
+                   latency=EdgeLatencyModel(base=2.0, jitter=0.0), seed=i)
+        for i in range(3)
+    ]
+    disp = MultiEdgeDispatcher(edges, "round_robin", on_saturation="degrade")
+    res = disp.dispatch(0.0, 0, 0.5, prefer=2)
+    assert res.edge == "e2"                      # preferred probes first
+    res = disp.dispatch(0.0, 1, 0.5, prefer=2)   # e2 saturated -> falls back
+    assert res.outcome == OUTCOME_OFFLOADED and res.edge != "e2"
+    res = disp.dispatch(0.0, 2, 0.5, prefer=2, pin=True)  # e2 saturated
+    assert res.outcome == OUTCOME_DEGRADED       # pinned: no fallback
+    with pytest.raises(ValueError):
+        disp.dispatch(0.0, 3, 0.5, pin=True)
+    with pytest.raises(IndexError):
+        disp.dispatch(0.0, 3, 0.5, prefer=9)
+
+
+# ---------------------------------------------------------------- handover
+
+
+def test_handover_hysteresis_and_dwell():
+    cov = CoverageMap(default_stations(2, area=(1000.0, 600.0)))
+    ctrl = HandoverController(cov, hysteresis_db=3.0, min_dwell=5.0)
+    assert ctrl.update(0.0, np.array([260.0, 300.0])) is None  # attach, no event
+    assert ctrl.serving == 0
+    # just across the midline: inside the hysteresis band, no handover
+    assert ctrl.update(1.0, np.array([510.0, 300.0])) is None
+    # clearly in cell 1 but dwell not yet satisfied
+    assert ctrl.update(2.0, np.array([700.0, 300.0])) is None
+    ev = ctrl.update(6.0, np.array([700.0, 300.0]))
+    assert ev is not None and (ev.source, ev.target) == (0, 1)
+    assert ev.rss_target - ev.rss_source > 3.0
+    assert ctrl.serving == 1 and len(ctrl.events) == 1
+
+
+def test_apply_in_flight_semantics():
+    def ledger():
+        return [
+            PendingResult(t_done=5.0, capture_step=3, step=30, edge=0),
+            PendingResult(t_done=6.0, capture_step=4, step=41, edge=1),
+        ]
+
+    from repro.mobility import HandoverEvent
+
+    ev = HandoverEvent(t=4.0, source=0, target=1, rss_source=-80, rss_target=-60)
+    surv, n = apply_in_flight(ledger(), ev, "survive")
+    assert n == 0 and len(surv) == 2
+
+    edge = EdgeWorker("e", capacity=4,
+                      latency=EdgeLatencyModel(base=9.0, jitter=0.0), seed=0)
+    edge.try_admit(0.0, 30, 0.5)
+    died, n = apply_in_flight(ledger(), ev, "die", edges=[edge, None])
+    assert n == 1 and [p.edge for p in died] == [1]
+    assert edge.cancelled == 1 and edge.inflight == 0
+
+    stale, n = apply_in_flight(ledger(), ev, "stale", stale_penalty=4)
+    assert n == 1 and len(stale) == 2
+    assert stale[0].capture_step == 3 - 4 and stale[1].capture_step == 4
+
+    with pytest.raises(KeyError):
+        apply_in_flight(ledger(), ev, "teleport")
+
+
+def _crossing_runtime(in_flight: str, engine):
+    """One client walking straight through a 2-cell corridor with slow edge
+    service, so results are in flight when the handover fires."""
+    cov = CoverageMap(default_stations(2, area=(1000.0, 600.0)))
+    fleet = station_fleet(
+        cov, capacity=16,
+        service=EdgeLatencyModel(base=6.0, per_inflight=0.0, jitter=0.0),
+        transmit_time=0.05, downlink_time=0.02, seed=0,
+    )
+    rt = MobileRuntime(
+        engine, cov, fleet,
+        motion=MotionConfig(area=(1000.0, 600.0), speed=12.0),
+        mode="handover", in_flight=in_flight,
+        hysteresis_db=2.0, min_dwell=4.0, stale_penalty=5,
+        stale_horizon=24, seed=0,
+    )
+    T = 70
+    x = np.linspace(60.0, 940.0, T, dtype=np.float32)
+    pos = np.stack([x, np.full(T, 300.0, np.float32)], axis=-1)[:, None, :]
+    rng = np.random.default_rng(3)
+    feats = rng.normal(0, 1, (T, 1, 8)).astype(np.float32)
+    weak = np.full((T, 1), 0.3)
+    strong = np.full((T, 1), 0.9)
+    return rt.serve(feats, weak, strong, ratio=0.9, positions=pos)
+
+
+@pytest.fixture(scope="module")
+def crossing_engine():
+    return fitted_engine(ratio=0.9)
+
+
+def test_in_flight_semantics_on_seeded_trace(crossing_engine):
+    traces = {
+        m: _crossing_runtime(m, crossing_engine)
+        for m in ("survive", "die", "stale")
+    }
+    for mode, tr in traces.items():
+        assert tr.n_handovers() >= 1, mode
+        # seeded trace is bit-identical on a re-run
+        again = _crossing_runtime(mode, crossing_engine)
+        assert [r.as_dict() for r in again.records] == [
+            r.as_dict() for r in tr.records
+        ]
+        assert np.array_equal(again.positions, tr.positions)
+
+    surv, die, stale = traces["survive"], traces["die"], traces["stale"]
+    # die: the old edge's in-flight results were cancelled
+    cancelled = sum(
+        e.get("cancelled", 0) for e in die.dispatcher["edges"].values()
+    )
+    assert cancelled >= 1
+    assert sum(
+        e.get("cancelled", 0) for e in surv.dispatcher["edges"].values()
+    ) == 0
+    # die lost coverage survive kept
+    assert die.telemetry[0].covered_frames < surv.telemetry[0].covered_frames
+    # stale: same results arrive, but older
+    assert stale.telemetry[0].mean_staleness > surv.telemetry[0].mean_staleness
+    assert surv.mean_effective_accuracy() >= die.mean_effective_accuracy()
+
+
+# ------------------------------------------------------------------ policy
+
+
+def test_mobility_aware_policy_registered_and_discounts():
+    assert "mobility_aware" in list_policies()
+    cal = np.linspace(0.0, 1.0, 200)
+    # no probe: plain quantile behaviour
+    p = make_policy("mobility_aware", cal, 0.5)
+    assert p.decide(0.9) and not p.decide(0.05)
+    # ttl=0 kills the estimate entirely
+    p0 = make_policy("mobility_aware", cal, 0.5, coverage_ttl=lambda: 0.0)
+    assert not p0.decide(0.99)
+    # ample ttl leaves it untouched
+    pinf = make_policy(
+        "mobility_aware", cal, 0.5, coverage_ttl=lambda: float("inf")
+    )
+    assert pinf.decide(0.99)
+    with pytest.raises(ValueError):
+        make_policy("mobility_aware", cal, 0.5, rtt_horizon=0.0)
+
+
+def test_mobility_aware_budget_converges():
+    rng = np.random.default_rng(0)
+    cal = rng.uniform(0, 1, 500)
+    ttls = iter(np.r_[np.full(200, 0.5), np.full(800, np.inf)])
+    p = make_policy(
+        "mobility_aware", cal, 0.3, coverage_ttl=lambda: next(ttls)
+    )
+    dec = [p.decide(float(e)) for e in rng.uniform(0, 1, 1000)]
+    # suppressed early frames are paid back: realized ratio near target
+    assert abs(np.mean(dec) - 0.3) < 0.05
+
+
+def test_session_mobility_telemetry_gated():
+    eng = fitted_engine(ratio=0.4)
+    s = OffloadSession(eng, micro_batch=1)
+    base_keys = set(s.telemetry.as_dict())
+    s.record_handover()
+    s.record_coverage(-70.0)
+    s.record_coverage(-80.0)
+    tel = s.telemetry
+    assert set(tel.as_dict()) == base_keys  # byte-stable without the gate
+    d = tel.as_dict(include_mobility=True)
+    assert d["handovers"] == 1
+    assert d["coverage_samples"] == 2
+    assert d["mean_coverage_dbm"] == pytest.approx(-75.0)
+
+
+# ---------------------------------------------------------------- headline
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return default_mobile_scenario(n_clients=4, n_steps=120, seed=0)
+
+
+def test_headline_handover_beats_static_pinning(scenario):
+    handover = run_mobile_scenario(scenario, "handover")
+    static = run_mobile_scenario(scenario, "static")
+    # equal budget: identical policy decisions, so identical realized ratio
+    assert handover.realized_ratio() == pytest.approx(
+        static.realized_ratio(), abs=1e-12
+    )
+    # the headline: strictly better mean effective accuracy
+    assert handover.mean_effective_accuracy() > static.mean_effective_accuracy()
+    assert handover.n_handovers() >= 1 and static.n_handovers() == 0
+    # same seeded world: both modes saw bit-identical client motion
+    assert np.array_equal(handover.positions, static.positions)
+
+
+def test_headline_trace_deterministic(scenario):
+    a = run_mobile_scenario(scenario, "handover")
+    b = run_mobile_scenario(scenario, "handover")
+    assert np.array_equal(a.positions, b.positions)
+    assert [r.as_dict() for r in a.records] == [r.as_dict() for r in b.records]
+    assert [
+        [e.as_dict() for e in evs] for evs in a.handovers
+    ] == [[e.as_dict() for e in evs] for evs in b.handovers]
+
+
+def test_mobility_obs_spans_and_series(scenario):
+    import json
+
+    from repro.obs import Obs
+
+    obs = Obs()
+    tr = run_mobile_scenario(scenario, "handover", obs=obs)
+    assert tr.n_handovers() >= 1
+
+    text = obs.metrics.to_prometheus()
+    for series in (
+        "repro_handovers_total",
+        "repro_coverage_dbm",
+        "repro_coverage_samples_total",
+    ):
+        assert series in text, series
+    assert 'stream="client0"' in text
+
+    evs = json.loads(json.dumps(obs.tracer.to_chrome()))["traceEvents"]
+    offloads = {
+        e["id"]: (e["ts"], None) for e in evs
+        if e["name"] == "offload" and e["ph"] == "b"
+    }
+    assert offloads
+    ends = {
+        e["id"]: e["ts"] for e in evs
+        if e["name"] == "offload" and e["ph"] == "e"
+    }
+    # the return leg traces as its own async child inside the offload group
+    downlinks = [e for e in evs if e["name"] == "downlink" and e["ph"] == "b"]
+    assert downlinks
+    for d in downlinks:
+        assert offloads[d["id"]][0] <= d["ts"] <= ends[d["id"]]
+
+    # observability never perturbs the simulation
+    bare = run_mobile_scenario(scenario, "handover")
+    assert [r.as_dict() for r in bare.records] == [
+        r.as_dict() for r in tr.records
+    ]
+
+
+def test_mobile_trace_summary_shape(scenario):
+    tr = run_mobile_scenario(scenario, "handover")
+    s = tr.summary()
+    assert s["mode"] == "handover" and s["clients"] == 4
+    assert 0.0 < s["mean_effective_accuracy"] < 1.0
+    assert len(s["telemetry"]) == 4
+    for tel in s["telemetry"]:
+        assert "handovers" in tel and "mean_coverage_dbm" in tel
+    # static pinning still observes (and reports) the decaying signal
+    st = run_mobile_scenario(scenario, "static")
+    assert all(t["coverage_samples"] > 0 for t in st.summary()["telemetry"])
